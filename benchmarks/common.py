@@ -1,0 +1,30 @@
+"""Shared benchmark plumbing: JSON artifact output + CSV stdout lines."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "bench")
+
+
+def emit(name: str, payload: Dict[str, Any], csv_value: float,
+         derived: str = "") -> None:
+    """Write results/bench/<name>.json and print one CSV summary line in
+    the harness format ``name,us_per_call,derived``."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    print(f"{name},{csv_value:.3f},{derived}", flush=True)
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.s = time.perf_counter() - self.t0

@@ -1,0 +1,72 @@
+"""Paper Fig. 12: end-to-end SLO compliance of the full BARISTA loop
+(forecast -> Algorithm 1/2 -> lifecycle -> LB -> latency monitor) on the
+workload traces, with the Barista forecaster in the loop.
+
+Paper targets: 99% compliance for Resnet (2s) and Wavenet (1.5s) over
+12000 s; 97% for Xception (2s).  Our services: three assigned archs with
+comparable SLO tightness on the taxi trace."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import ServiceSpec, SLOSpec, RequestShape, min_mem_gib
+from repro.core.forecast import BaristaForecaster, ForecasterConfig, \
+    ProphetConfig
+from repro.configs import get_config
+from repro.serving.cluster import FleetSimulator, SimConfig
+from repro.workload.generator import get_trace
+
+# (arch, SLO seconds, request seq) — SLO tightness mirrors the paper's
+# per-service bounds (Resnet 2s / Wavenet 1.5s / Xception 2s)
+SERVICES = [
+    ("llama3-8b", 2.0, 1024),
+    ("qwen3-4b", 1.5, 1024),
+    ("phi3-medium-14b", 2.0, 1024),
+]
+MINUTES = 200          # paper: 12000 s
+
+
+def run(trace: str = "taxi", seed: int = 0) -> dict:
+    tr = get_trace(trace)
+    (t_tr, y_tr), (t_val, y_val), (t_te, y_te) = tr.split()
+    fcfg = ForecasterConfig(window=6000,
+                            prophet=ProphetConfig(fourier_order=20,
+                                                  steps=800),
+                            compensator_train=3000, compensator_val=500)
+    fc = BaristaForecaster(fcfg, holidays=tr.holidays, seed=seed)
+    fc.warm_start(np.concatenate([t_tr, t_val]),
+                  np.concatenate([y_tr, y_val]), horizon=2)
+    path = fc.rolling_eval(t_te[:MINUTES], y_te[:MINUTES], horizon=2)
+
+    out = {}
+    for arch, slo_s, seq in SERVICES:
+        cfg = get_config(arch)
+        svc = ServiceSpec(
+            name=f"{arch}-svc", arch=arch, slo=SLOSpec(slo_s),
+            min_mem_gib=min_mem_gib(cfg, RequestShape(seq)),
+            request_seq=seq)
+
+        def forecast(now_s, horizon_s):
+            i = int(np.clip((now_s + horizon_s) / 60.0 - t_te[0], 0,
+                            len(path) - 1))
+            return float(path[i]) * slo_s / 60.0
+
+        sim = FleetSimulator(svc, sim=SimConfig(seed=seed))
+        res = sim.run(t_te[:MINUTES], y_te[:MINUTES], forecast)
+        out[arch] = dict(res.summary(), slo_s=slo_s,
+                         flavor=res.provision_history[0]["flavor"])
+    return out
+
+
+def main():
+    out = run()
+    comp = [v["slo_request_compliance"] for v in out.values()]
+    parts = ", ".join(f"{k}: {100 * v['slo_request_compliance']:.1f}%"
+                      for k, v in out.items())
+    emit("fig12_slo_compliance", out, 100 * float(min(comp)),
+         f"SLO compliance {parts} (paper: 97-99%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Paper Fig. 13 + §V-E: reactive vertical scaling for model correction.
+
+An over-provisioned fleet (big slices, deliberately over-forecasted) serves
+a light workload; the 5-second latency monitor drives per-replica chip
+de-allocation (one at a time) and SLO-miss doubling.  Paper targets: 15-30%
+of CPU shares saved with >= 98% SLO hits — here chip-seconds of the leased
+slices handed back to co-located batch jobs."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import ServiceSpec, SLOSpec, RequestShape, min_mem_gib
+from repro.configs import get_config
+from repro.serving.cluster import FleetSimulator, SimConfig
+from repro.workload.generator import get_trace
+
+# tight SLOs at 4k-token requests force Algorithm 1 onto multi-chip
+# flavors (the paper's 8-core VM), giving the vertical scaler room to
+# de-allocate — the paper's Fig. 13 setup
+SERVICES = [("qwen3-4b", 0.35, 4096), ("llama3-8b", 0.7, 4096)]
+FIXED_FLAVOR = "v5e-8"      # paper §V-E: "a VM of 8 cores"
+MINUTES = 120
+OVERPROVISION = 2.5
+
+
+def run(seed: int = 0) -> dict:
+    tr = get_trace("taxi")
+    y = tr.y * 0.3                      # light load -> headroom to reclaim
+    out = {}
+    for arch, slo_s, seq in SERVICES:
+        cfg = get_config(arch)
+        svc = ServiceSpec(
+            name=f"{arch}-svc", arch=arch, slo=SLOSpec(slo_s),
+            min_mem_gib=min_mem_gib(cfg, RequestShape(seq)),
+            request_seq=seq)
+
+        def forecast(now_s, horizon_s):
+            i = int(np.clip((now_s + horizon_s) / 60.0 - tr.t[0], 0,
+                            len(y) - 1))
+            return OVERPROVISION * float(y[i]) * slo_s / 60.0
+
+        from repro.core.cost import get_flavor
+        res = {}
+        for mode, vertical in (("vertical", True), ("fixed", False)):
+            sim = FleetSimulator(
+                svc, flavors=[get_flavor(FIXED_FLAVOR)],
+                sim=SimConfig(seed=seed, vertical=vertical,
+                              vertical_margin=0.45))
+            res[mode] = sim.run(tr.t[:MINUTES], y[:MINUTES], forecast)
+        v = res["vertical"]
+        # replica-seconds leased over the run x chips per slice
+        leased_s = sum(h["fleet"] for h in v.provision_history) * 60.0
+        flavor_chips = get_flavor(v.provision_history[0]["flavor"]).chips
+        total_chip_s = leased_s * flavor_chips
+        saved_pct = 100.0 * v.chip_seconds_saved / max(total_chip_s, 1.0)
+        out[arch] = {
+            "slo_hits_vertical_pct": round(
+                100 * v.request_compliance, 2),
+            "slo_hits_fixed_pct": round(
+                100 * res["fixed"].request_compliance, 2),
+            "chip_seconds_saved": round(v.chip_seconds_saved, 1),
+            "chip_seconds_leased": round(total_chip_s, 1),
+            "chip_share_saved_pct": round(saved_pct, 1),
+            "vertical_events": v.vertical_events,
+            "paper_target": "15-30% shares saved, >=98% SLO hits",
+        }
+    return out
+
+
+def main():
+    out = run()
+    saved = [v["chip_share_saved_pct"] for v in out.values()]
+    hits = min(v["slo_hits_vertical_pct"] for v in out.values())
+    emit("fig13_vertical", out, float(np.mean(saved)),
+         f"chip shares saved {saved[0]}% / {saved[1]}% with "
+         f">= {hits}% SLO hits (paper: 15-30%, >=98%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Paper Fig. 1: prediction-time distributions per model per resource size.
+
+CPU cores -> TPU slice chips.  For each assigned architecture x flavor we
+draw 10k samples from the roofline-calibrated latency model and report the
+box-plot statistics (p5/p25/p50/p75/p95) plus the parallel-speedup curve —
+validating the paper's premise that the services are parallelizable with
+good speedup, and its caveat that speedup is sub-linear (which is what
+makes flavor choice non-trivial)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import ARCH_IDS, get_config
+from repro.core.cost import FLAVORS
+from repro.core.latency_model import (LatencySampler, RequestShape,
+                                      flavor_feasible)
+
+SHAPE = RequestShape(seq=1024)
+
+
+def run(n: int = 10_000) -> dict:
+    sampler = LatencySampler(seed=0)
+    out = {}
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        rows = {}
+        for f in FLAVORS:
+            if not flavor_feasible(cfg, SHAPE, f):
+                rows[f.name] = None
+                continue
+            s = sampler.sample(cfg, SHAPE, f.chips, n=n)
+            rows[f.name] = {
+                "p5": float(np.percentile(s, 5)),
+                "p25": float(np.percentile(s, 25)),
+                "p50": float(np.percentile(s, 50)),
+                "p75": float(np.percentile(s, 75)),
+                "p95": float(np.percentile(s, 95)),
+                "mean": float(s.mean()),
+            }
+        feas = [r for r in rows.values() if r]
+        speedup = feas[0]["p50"] / feas[-1]["p50"] if len(feas) > 1 else 1.0
+        chips_ratio = None
+        names = [k for k, r in rows.items() if r]
+        if len(names) > 1:
+            c0 = next(f.chips for f in FLAVORS if f.name == names[0])
+            c1 = next(f.chips for f in FLAVORS if f.name == names[-1])
+            chips_ratio = c1 / c0
+        out[arch] = {"flavors": rows, "speedup_small_to_large": speedup,
+                     "chips_ratio": chips_ratio}
+    return out
+
+
+def main():
+    out = run()
+    speedups = [v["speedup_small_to_large"] for v in out.values()
+                if v["chips_ratio"] and v["chips_ratio"] > 1]
+    emit("fig1_exec_time", out, float(np.mean(speedups)),
+         f"mean parallel speedup x{np.mean(speedups):.1f} across archs "
+         f"(sub-linear, paper Fig.1 premise)")
+
+
+if __name__ == "__main__":
+    main()

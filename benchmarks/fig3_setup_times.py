@@ -1,0 +1,38 @@
+"""Paper Fig. 3: per-service setup-time decomposition t_vm / t_cd / t_ml.
+
+On TPU: slice bring-up / image pull + XLA compile / weights staging into
+HBM.  The spread across architectures (0.3 GiB smollm vs ~52 GiB internvl2
+checkpoints) is exactly why the provisioner must look t'_setup ahead PER
+SERVICE rather than with a flat boot constant."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs import ARCH_IDS, get_config
+from repro.core.lifecycle import setup_times_for
+
+
+def run() -> dict:
+    out = {}
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        st = setup_times_for(cfg)
+        out[arch] = {
+            "t_vm_s": st.t_vm, "t_cd_s": st.t_cd, "t_ml_s": st.t_ml,
+            "t_setup_s": round(st.t_setup, 2),
+            "ckpt_gib": round(2 * cfg.param_count() / 2 ** 30, 2),
+        }
+    return out
+
+
+def main():
+    out = run()
+    spread = max(v["t_setup_s"] for v in out.values()) / \
+        min(v["t_setup_s"] for v in out.values())
+    emit("fig3_setup_times", out,
+         max(v["t_setup_s"] for v in out.values()),
+         f"t_setup spread x{spread:.1f} across services -> per-service "
+         "lookahead required")
+
+
+if __name__ == "__main__":
+    main()

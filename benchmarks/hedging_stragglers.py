@@ -1,0 +1,76 @@
+"""Beyond-paper: straggler mitigation via hedged requests.
+
+At 1000+-replica scale, transiently slow replicas (preempted hosts, ECC
+scrubs, incast) put an 8x heavy tail on a few percent of requests — enough
+to sink a p95 SLO even when the median is fine.  The backend LB reissues a
+request to the runner-up replica when the primary exceeds
+``factor x profiled p95`` (timeout hedge).  This experiment injects a 3%
+8x-straggler tail and compares hedging off vs on at equal fleet size."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import RequestShape, ServiceSpec, SLOSpec, min_mem_gib
+from repro.core.latency_model import LatencySampler
+from repro.configs import get_config
+from repro.serving.cluster import FleetSimulator, SimConfig
+from repro.workload.generator import get_trace
+
+ARCH = "llama3-8b"
+SLO_S = 2.0
+MINUTES = 90
+STRAGGLER_PROB = 0.03
+STRAGGLER_MULT = 8.0
+HEADROOM = 1.4        # modest over-provision: queues stay short, so the
+                      # latency tail IS the straggler tail (the regime the
+                      # mitigation targets; at 100% utilization the tail is
+                      # queueing and no dispatch policy can hide it)
+
+
+def run(seed: int = 0) -> dict:
+    cfg = get_config(ARCH)
+    svc = ServiceSpec(name="svc", arch=ARCH, slo=SLOSpec(SLO_S),
+                      min_mem_gib=min_mem_gib(cfg, RequestShape(1024)),
+                      request_seq=1024)
+    tr = get_trace("taxi")
+
+    def forecast(now_s, horizon_s):
+        i = int(np.clip((now_s + horizon_s) / 60.0 - tr.t[0], 0,
+                        len(tr.y) - 1))
+        return HEADROOM * float(tr.y[i]) * SLO_S / 60.0
+
+    out = {}
+    for mode, factor in (("no_hedge", 0.0), ("hedge_2x_p95", 2.0)):
+        sampler = LatencySampler(straggler_prob=STRAGGLER_PROB,
+                                 straggler_mult=STRAGGLER_MULT, seed=seed)
+        sim = FleetSimulator(svc, sim=SimConfig(
+            seed=seed, vertical=False, hedge_timeout_factor=factor),
+            sampler=sampler)
+        res = sim.run(tr.t[:MINUTES], tr.y[:MINUTES], forecast)
+        lat = res.latencies
+        out[mode] = {
+            "p95_s": round(float(np.percentile(lat, 95)), 4),
+            "p99_s": round(float(np.percentile(lat, 99)), 4),
+            "p999_s": round(float(np.percentile(lat, 99.9)), 4),
+            "slo_request_compliance": round(res.request_compliance, 4),
+            "hedged_requests": res.hedged,
+            "requests": len(lat),
+        }
+    a, b = out["no_hedge"], out["hedge_2x_p95"]
+    out["p99_improvement_x"] = round(a["p99_s"] / b["p99_s"], 2)
+    out["hedge_rate_pct"] = round(
+        100 * b["hedged_requests"] / b["requests"], 2)
+    return out
+
+
+def main():
+    out = run()
+    emit("hedging_stragglers", out, out["p99_improvement_x"],
+         f"p99 {out['no_hedge']['p99_s']}s -> {out['hedge_2x_p95']['p99_s']}s "
+         f"({out['p99_improvement_x']}x) hedging {out['hedge_rate_pct']}% "
+         f"of requests under a 3% 8x-straggler tail")
+
+
+if __name__ == "__main__":
+    main()

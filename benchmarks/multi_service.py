@@ -1,0 +1,95 @@
+"""Beyond-paper: multi-service fleet + batch-job harvest.
+
+The paper's conclusion names this as future work: multiple prediction
+services co-existing with low-priority batch jobs.  Here three services
+(speech, plate-recognition, embedded assistant) run their own BARISTA
+loops over different traces; the shared low-priority batch pool harvests
+  (a) Container-Cold slices parked by Algorithm 2's scale-downs, and
+  (b) chips freed by per-replica vertical scaling,
+both already modeled with the paper's 20% co-location interference.
+Reported: per-service SLO compliance, total lease cost, and the batch
+chip-hours harvested — the utilization the serverless provider recovers
+from SLO-bounded serving."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import RequestShape, ServiceSpec, SLOSpec, min_mem_gib
+from repro.core.cost import get_flavor
+from repro.configs import get_config
+from repro.serving.cluster import FleetSimulator, SimConfig
+from repro.workload.generator import get_trace
+
+SERVICES = [
+    ("llama3-8b", "taxi", 2.0, 1024),      # speech recognition
+    ("qwen3-4b", "toll", 1.5, 1024),       # license-plate recognition
+    ("smollm-135m", "taxi", 0.5, 512),     # embedded assistant
+]
+MINUTES = 120
+
+
+def _batch_harvest(res, sim) -> float:
+    """Chip-seconds recovered for batch jobs: cold-pool slices (leased but
+    not serving) + vertically freed chips."""
+    cold = 0.0
+    tl = res.replica_timeline
+    flavor_chips = get_flavor(res.provision_history[0]["flavor"]).chips
+    for (t0, serving0, leased0), (t1, _, _) in zip(tl, tl[1:]):
+        cold += max(leased0 - serving0, 0) * (t1 - t0) * flavor_chips
+    return cold + res.chip_seconds_saved
+
+
+def run(seed: int = 0) -> dict:
+    out = {}
+    total_cost = 0.0
+    total_harvest = 0.0
+    for arch, trace, slo_s, seq in SERVICES:
+        cfg = get_config(arch)
+        svc = ServiceSpec(
+            name=f"{arch}-svc", arch=arch, slo=SLOSpec(slo_s),
+            min_mem_gib=min_mem_gib(cfg, RequestShape(seq)),
+            request_seq=seq)
+        tr = get_trace(trace)
+
+        def forecast(now_s, horizon_s, tr=tr, slo_s=slo_s):
+            i = int(np.clip((now_s + horizon_s) / 60.0 - tr.t[0], 0,
+                            len(tr.y) - 1))
+            return float(tr.y[i]) * slo_s / 60.0
+
+        # vertical off here: cross-coupling a latency-only scaler with
+        # Algorithm 1's throughput sizing needs the joint controller the
+        # paper defers to future work (fig13 demonstrates vertical harvest
+        # in isolation); the cold-pool harvest below is pure Algorithm 2
+        sim = FleetSimulator(svc, sim=SimConfig(seed=seed, vertical=False))
+        res = sim.run(tr.t[:MINUTES], tr.y[:MINUTES], forecast)
+        harvest = _batch_harvest(res, sim)
+        total_cost += res.total_cost_usd
+        total_harvest += harvest
+        out[svc.name] = {
+            "trace": trace, "slo_s": slo_s,
+            "slo_request_compliance": round(res.request_compliance, 4),
+            "cost_usd": round(res.total_cost_usd, 2),
+            "flavor": res.provision_history[0]["flavor"],
+            "batch_chip_hours_harvested": round(harvest / 3600.0, 2),
+        }
+    out["fleet"] = {
+        "total_cost_usd": round(total_cost, 2),
+        "total_batch_chip_hours": round(total_harvest / 3600.0, 2),
+        "min_compliance": min(v["slo_request_compliance"]
+                              for k, v in out.items() if k != "fleet"),
+    }
+    return out
+
+
+def main():
+    out = run()
+    f = out["fleet"]
+    emit("multi_service", out, f["total_batch_chip_hours"],
+         f"3 services: min compliance {100*f['min_compliance']:.1f}%, "
+         f"${f['total_cost_usd']} leases, {f['total_batch_chip_hours']} "
+         "chip-hours harvested for batch jobs (paper future-work §VI)")
+
+
+if __name__ == "__main__":
+    main()

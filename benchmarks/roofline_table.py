@@ -1,0 +1,107 @@
+"""§Roofline deliverable: render the dry-run records (results/dryrun.json)
+into the per-(arch x shape x mesh) roofline table consumed by
+EXPERIMENTS.md — three terms, dominant bottleneck, MODEL_FLOPS/HLO_FLOPS,
+roofline fraction, and a one-line 'what would move it'."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "results",
+                      "dryrun.json")
+
+_ADVICE = {
+    ("train", "memory"): "cut HBM traffic: fewer remat re-reads / fuse "
+                         "optimizer update / bf16 moments",
+    ("train", "compute"): "raise MFU: bigger per-chip tiles, reduce "
+                          "non-matmul FLOPs (remat recompute)",
+    ("train", "collective"): "overlap grad all-reduce with backward; "
+                             "int8 compression; shard over fewer axes",
+    ("prefill", "memory"): "stream KV/weights once: larger attention "
+                           "blocks, fuse norm+proj",
+    ("prefill", "compute"): "near roofline already; watch causal-block "
+                            "skipping",
+    ("prefill", "collective"): "batch TP all-reduces across layers / "
+                               "sequence-shard the residual",
+    ("decode", "memory"): "weights re-read per token dominates: "
+                          "quantize weights, widen batch, speculative "
+                          "decoding",
+    ("decode", "compute"): "unexpected for decode; inspect HLO",
+    ("decode", "collective"): "shrink per-token all-reduces: move to "
+                              "one-shot all-gather of activations",
+}
+
+
+def build_rows(records: dict, mesh: str = "16x16"):
+    rows = []
+    for key, rec in sorted(records.items()):
+        if rec.get("mesh") != mesh:
+            continue
+        if rec.get("status") == "skip":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "status": "skip", "why": rec.get("skip_reason")})
+            continue
+        if rec.get("status") != "ok" or "roofline" not in rec:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "status": rec.get("status", "?")})
+            continue
+        rl = rec["roofline"]
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "status": "ok",
+            "compute_ms": round(rl["compute_s"] * 1e3, 2),
+            "memory_ms": round(rl["memory_s"] * 1e3, 2),
+            "collective_ms": round(rl["collective_s"] * 1e3, 2),
+            "dominant": rl["dominant"],
+            "bound_ms": round(rl["bound_s"] * 1e3, 2),
+            "useful_flops_frac": round(rl["useful_flops_frac"], 3),
+            "roofline_frac": round(rl["roofline_frac"], 4),
+            "peak_gib": round(rec["memory"]["peak_bytes"] / 2 ** 30, 2),
+            "fits_hbm": rec["fits_hbm"],
+            "advice": _ADVICE.get((rec["kind"], rl["dominant"]), ""),
+        })
+    return rows
+
+
+def to_markdown(rows) -> str:
+    hdr = ("| arch | shape | comp ms | mem ms | coll ms | dominant | "
+           "bound ms | useful | roofline | peak GiB | fits |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|\n")
+    body = []
+    for r in rows:
+        if r["status"] != "ok":
+            body.append(f"| {r['arch']} | {r['shape']} | — skip: "
+                        f"{r.get('why','')} |" + " |" * 8)
+            continue
+        body.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_ms']} | "
+            f"{r['memory_ms']} | {r['collective_ms']} | {r['dominant']} | "
+            f"{r['bound_ms']} | {r['useful_flops_frac']} | "
+            f"{r['roofline_frac']} | {r['peak_gib']} | "
+            f"{'yes' if r['fits_hbm'] else 'NO'} |")
+    return hdr + "\n".join(body) + "\n"
+
+
+def main():
+    if not os.path.exists(DRYRUN):
+        print("roofline_table,0.000,results/dryrun.json missing — run "
+              "PYTHONPATH=src python -m repro.launch.dryrun first")
+        return
+    with open(DRYRUN) as f:
+        records = json.load(f)
+    rows = build_rows(records)
+    ok = [r for r in rows if r["status"] == "ok"]
+    worst = min(ok, key=lambda r: r["roofline_frac"]) if ok else None
+    payload = {"rows": rows, "markdown": to_markdown(rows),
+               "n_ok": len(ok),
+               "all_fit": all(r["fits_hbm"] for r in ok)}
+    emit("roofline_table", payload,
+         float(sum(r["roofline_frac"] for r in ok) / max(len(ok), 1)),
+         f"{len(ok)} cells, all_fit={payload['all_fit']}, worst "
+         f"roofline_frac={worst['roofline_frac'] if worst else '—'} "
+         f"({worst['arch']}|{worst['shape'] if worst else ''})")
+
+
+if __name__ == "__main__":
+    main()

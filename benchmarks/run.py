@@ -1,0 +1,46 @@
+"""Run every benchmark (one per paper table/figure + the roofline table).
+Prints one CSV line per benchmark: ``name,value,derived``."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (fig1_exec_time, fig3_setup_times,
+                        fig6_distribution_fit, fig7_10_forecasting,
+                        fig11_cost, fig12_slo_compliance, fig13_vertical,
+                        ablation_erratum, hedging_stragglers,
+                        multi_service, roofline_table)
+
+ALL = [
+    ("fig1_exec_time", fig1_exec_time.main),
+    ("fig3_setup_times", fig3_setup_times.main),
+    ("fig6_distribution_fit", fig6_distribution_fit.main),
+    ("fig7_10_forecasting", fig7_10_forecasting.main),
+    ("fig11_cost", fig11_cost.main),
+    ("fig12_slo_compliance", fig12_slo_compliance.main),
+    ("fig13_vertical", fig13_vertical.main),
+    ("hedging_stragglers", hedging_stragglers.main),
+    ("ablation_erratum", ablation_erratum.main),
+    ("multi_service", multi_service.main),
+    ("roofline_table", roofline_table.main),
+]
+
+
+def main() -> None:
+    only = set(sys.argv[1:])
+    failed = []
+    for name, fn in ALL:
+        if only and name not in only:
+            continue
+        try:
+            fn()
+        except Exception as e:     # noqa: BLE001 — report and continue
+            failed.append(name)
+            print(f"{name},nan,FAILED {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

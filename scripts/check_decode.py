@@ -1,0 +1,51 @@
+"""Dev check: decode(prefill(S), token) logits == prefill(S+3) last logits.
+
+Uses fp32 so the comparison is exact up to accumulation order; the bf16
+production path differs only in rounding (softmax sharpness amplifies it).
+"""
+import dataclasses
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_reduced_config
+from repro import data as data_lib
+from repro.models import decode_step, init_params, moe_blocks_for, prefill
+
+mesh = jax.make_mesh((1, 1), ("data", "model"))
+ok = True
+for arch in (sys.argv[1:] or [a for a in ARCH_IDS if a != "hubert-xlarge"]):
+    cfg = dataclasses.replace(get_reduced_config(arch), dtype="float32")
+    with jax.set_mesh(mesh):
+        params = init_params(cfg, jax.random.key(1), moe_blocks_for(cfg, 1),
+                             dtype="float32")
+        B, S = 2, 96   # > reduced SWA window of 64 to exercise the ring
+        batch = data_lib.synthetic_batch(cfg, B, S + 4)
+
+        def sub(n):
+            out = {}
+            for k, v in batch.items():
+                if k == "targets":
+                    continue
+                v = v if k == "patches" else v[:, :n]
+                out[k] = v.astype(jnp.float32) if v.dtype == jnp.bfloat16 else v
+            return out
+
+        lg_full, _ = jax.jit(lambda p, b: prefill(cfg, p, b, mesh))(
+            params, sub(S + 3))
+        _, cache = jax.jit(lambda p, b: prefill(cfg, p, b, mesh,
+                                                max_len=S + 8))(params, sub(S))
+        step = jax.jit(lambda p, t, c: decode_step(cfg, p, t, c, mesh))
+        lg = None
+        for t in range(S, S + 3):
+            lg, cache = step(params, batch["tokens"][:, t:t + 1], cache)
+        a = np.asarray(lg[:, -1], np.float32)
+        b = np.asarray(lg_full[:, -1], np.float32)
+        err = np.max(np.abs(a - b)) / (np.max(np.abs(b)) + 1e-9)
+        status = "OK " if err < 1e-4 else "FAIL"
+        ok &= err < 1e-4
+        print(f"{status} {arch}: rel_err={err:.2e}")
+print("ALL OK" if ok else "FAILURES")
+sys.exit(0 if ok else 1)

@@ -1,0 +1,43 @@
+import json
+d = json.load(open('results/dryrun.json'))
+b = json.load(open('results/dryrun_baseline.json'))
+
+print("### SINGLE-POD ROOFLINE TABLE (16x16)\n")
+print("| arch | shape | kind | comp ms | mem ms | coll ms | dominant | bound ms | useful | roofline frac | peak GiB | fits |")
+print("|---|---|---|---|---|---|---|---|---|---|---|---|")
+order = ["train_4k","prefill_32k","decode_32k","long_500k"]
+archs = sorted({v['arch'] for v in d.values()})
+for a in archs:
+    for sh in order:
+        k = f"{a}|{sh}|single"
+        v = d.get(k)
+        if v is None: continue
+        if v['status']=='skip':
+            print(f"| {a} | {sh} | — | skip: {v['skip_reason'][:48]} |||||||||")
+            continue
+        rl = v['roofline']
+        print(f"| {a} | {sh} | {v['kind']} | {rl['compute_s']*1e3:.1f} | {rl['memory_s']*1e3:.1f} | {rl['collective_s']*1e3:.1f} | {rl['dominant']} | {rl['bound_s']*1e3:.1f} | {rl['useful_flops_frac']:.3f} | {rl['roofline_frac']:.4f} | {v['memory']['peak_bytes']/2**30:.2f} | {'yes' if v['fits_hbm'] else 'NO'} |")
+
+print("\n### MULTI-POD (2x16x16) COMPILE PROOF\n")
+print("| arch | shape | status | peak GiB | fits | compile s |")
+print("|---|---|---|---|---|---|")
+for a in archs:
+    for sh in order:
+        k = f"{a}|{sh}|multi"
+        v = d.get(k)
+        if v is None: continue
+        if v['status']=='skip':
+            print(f"| {a} | {sh} | skip | | | |")
+            continue
+        print(f"| {a} | {sh} | {v['status']} | {v['memory']['peak_bytes']/2**30:.2f} | {'yes' if v['fits_hbm'] else 'NO'} | {v.get('compile_s','')} |")
+
+print("\n### BASELINE vs OPTIMIZED (all single-pod cells)\n")
+print("| cell | baseline bound ms | optimized bound ms | speedup | baseline dom | optimized dom |")
+print("|---|---|---|---|---|---|")
+for a in archs:
+    for sh in order:
+        k = f"{a}|{sh}|single"
+        if k not in d or d[k].get('status')!='ok' or k not in b or b[k].get('status')!='ok': continue
+        n, o = d[k]['roofline'], b[k]['roofline']
+        sp = o['bound_s']/n['bound_s']
+        print(f"| {a} x {sh} | {o['bound_s']*1e3:.1f} | {n['bound_s']*1e3:.1f} | {sp:.1f}x | {o['dominant']} | {n['dominant']} |")

@@ -1,0 +1,44 @@
+"""Dev check: forward + prefill + decode for every reduced arch on 1 device."""
+import sys
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_reduced_config
+from repro import data as data_lib
+from repro.models import (decode_step, forward, init_cache, init_params,
+                          moe_blocks_for, prefill)
+
+mesh = jax.make_mesh((1, 1), ("data", "model"))
+ok = True
+only = sys.argv[1:] or ARCH_IDS
+for arch in only:
+    cfg = get_reduced_config(arch)
+    try:
+        with jax.set_mesh(mesh):
+            params = init_params(cfg, jax.random.key(0), moe_blocks_for(cfg, 1))
+            B, S = 2, 64
+            batch = data_lib.synthetic_batch(cfg, B, S)
+            loss, metrics = jax.jit(
+                lambda p, b: forward(cfg, p, b, mesh))(params, batch)
+            assert jnp.isfinite(loss), f"loss not finite: {loss}"
+            pre = {k: v[:, :S // 2] if k != "patches" else v
+                   for k, v in batch.items()}
+            logits, cache = jax.jit(
+                lambda p, b: prefill(cfg, p, b, mesh, max_len=S))(params, pre)
+            assert jnp.all(jnp.isfinite(logits.astype(jnp.float32)))
+            if cfg.supports_decode:
+                tok = batch["tokens"][:, :1]
+                lg, cache = jax.jit(
+                    lambda p, t, c: decode_step(cfg, p, t, c, mesh))(
+                        params, tok, cache)
+                assert lg.shape[0] == B and jnp.all(
+                    jnp.isfinite(lg.astype(jnp.float32)))
+        print(f"OK   {arch}  loss={float(loss):.3f}")
+    except Exception as e:
+        ok = False
+        print(f"FAIL {arch}: {type(e).__name__}: {e}")
+        traceback.print_exc(limit=8)
+print("ALL OK" if ok else "FAILURES")
+sys.exit(0 if ok else 1)

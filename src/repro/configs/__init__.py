@@ -1,0 +1,53 @@
+"""Config registry: ``--arch <id>`` resolution for every assigned architecture."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Tuple
+
+from repro.configs.base import (  # noqa: F401 (re-export)
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    ShapeConfig,
+    SHAPES,
+    get_shape,
+    cell_is_runnable,
+)
+
+_ARCH_MODULES: Dict[str, str] = {
+    "qwen3-4b": "qwen3_4b",
+    "llama3-8b": "llama3_8b",
+    "smollm-135m": "smollm_135m",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "mamba2-370m": "mamba2_370m",
+    "hubert-xlarge": "hubert_xlarge",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "internvl2-26b": "internvl2_26b",
+    "zamba2-2.7b": "zamba2_2_7b",
+}
+
+ARCH_IDS: Tuple[str, ...] = tuple(_ARCH_MODULES)
+
+
+def _load(arch: str):
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; have {list(_ARCH_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _load(arch).CONFIG
+
+
+def get_reduced_config(arch: str) -> ModelConfig:
+    return _load(arch).REDUCED
+
+
+def all_cells():
+    """Yield every (arch, shape, runnable, skip_reason) assignment cell."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, why = cell_is_runnable(cfg, shape)
+            yield arch, shape, ok, why

@@ -1,0 +1,188 @@
+"""Architecture + shape configuration for the BARISTA serving framework.
+
+Every assigned architecture gets one module in this package defining a
+``ModelConfig`` with the exact published hyper-parameters.  Reduced configs
+(same family, tiny dims) power the CPU smoke tests; the full configs are only
+ever lowered via ShapeDtypeStructs in the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+VOCAB_PAD_MULTIPLE = 128  # pad vocab so ('vocab' % (tp*128) issues never arise
+
+
+def pad_vocab(v: int, multiple: int = VOCAB_PAD_MULTIPLE) -> int:
+    return ((v + multiple - 1) // multiple) * multiple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_routed: int          # routed experts
+    top_k: int
+    n_shared: int = 0      # always-on shared experts (DeepSeekMoE)
+    d_ff_expert: int = 0   # per-expert hidden dim
+    capacity_factor: float = 1.25   # per-expert token capacity multiplier
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int           # N
+    head_dim: int = 64     # P
+    expand: int = 2        # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk: int = 128       # SSD chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str            # dense | moe | ssm | hybrid | encoder | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    # --- optional features -------------------------------------------------
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    sliding_window: int = 0          # 0 = full attention
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid (zamba2-style): shared attention block applied every k layers
+    hybrid_attn_every: int = 0       # 0 = not hybrid
+    # vlm: number of visual patch embeddings prepended to the text sequence
+    n_patches: int = 0
+    # encoder-only (no causal mask, no decode step)
+    is_encoder: bool = False
+    # frontend stub: inputs are precomputed frame/patch embeddings
+    embed_inputs: bool = False       # True => input_specs gives float embeddings
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    # set when heads are padded for TP divisibility (keeps original head_dim)
+    head_dim_override: int = 0
+    # citation tag from the assignment table
+    source: str = ""
+
+    @property
+    def head_dim(self) -> int:
+        if self.head_dim_override:
+            return self.head_dim_override
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def padded_vocab(self) -> int:
+        return pad_vocab(self.vocab)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_decode(self) -> bool:
+        return not self.is_encoder
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch serve a 500k-token context?  SSM / hybrid state models
+        and bounded-window attention qualify; full quadratic attention does not.
+        """
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return self.sliding_window > 0
+
+    def param_count(self) -> int:
+        """Analytic parameter count (unpadded vocab), used for MODEL_FLOPS and
+        checkpoint-size estimates (t_ml)."""
+        d, v = self.d_model, self.vocab
+        # embed_inputs archs replace the token table with a frame projection
+        emb = (d * d + d) if self.embed_inputs else v * d
+        head = v * d                                # untied LM head
+        total = emb + (0 if self.is_encoder else head) + d  # final norm
+        if self.is_encoder:
+            total += self.vocab * d                 # frame-prediction head
+        if self.family == "vlm":
+            total += d * d                          # patch projection stub
+        for li in range(self.n_layers):
+            total += self._layer_params(li)
+        if self.hybrid_attn_every:
+            # one shared attention block (params counted once)
+            total += self._attn_params() + 2 * self.d_model
+        return int(total)
+
+    def _attn_params(self) -> int:
+        d, hd = self.d_model, self.head_dim
+        q = d * self.n_heads * hd
+        kv = 2 * d * self.n_kv_heads * hd
+        o = self.n_heads * hd * d
+        return q + kv + o
+
+    def _layer_params(self, li: int) -> int:
+        d = self.d_model
+        p = 2 * d  # two RMSNorm scales
+        if self.family == "ssm" or (self.hybrid_attn_every and self.ssm is not None):
+            s = self.ssm
+            d_in = s.expand * d
+            nheads = d_in // s.head_dim
+            p += d * (2 * d_in + 2 * s.d_state + nheads)      # in_proj (z,x,B,C,dt)
+            p += s.conv_width * (d_in + 2 * s.d_state)        # conv
+            p += nheads * 2                                   # A_log, D
+            p += d_in * d                                     # out_proj
+            if self.family == "ssm":
+                return p
+            # hybrid: mamba layer done; attention counted separately (shared)
+            return p
+        p += self._attn_params()
+        if self.moe is not None:
+            m = self.moe
+            e_ff = m.d_ff_expert or self.d_ff
+            p += d * m.n_routed                                # router
+            p += (m.n_routed + m.n_shared) * 3 * d * e_ff      # swiglu experts
+        else:
+            p += 3 * d * self.d_ff                             # swiglu
+        return p
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE: only top-k + shared experts)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        d = self.d_model
+        e_ff = m.d_ff_expert or self.d_ff
+        dead = (m.n_routed - m.top_k) * 3 * d * e_ff * self.n_layers
+        return int(self.param_count() - dead)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+# The four assigned shapes (identical across the LM family).
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown shape {name!r}; have {[s.name for s in SHAPES]}")
+
+
+def cell_is_runnable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether (arch x shape) is a valid dry-run cell, with skip reason."""
+    if shape.kind == "decode" and not cfg.supports_decode:
+        return False, "encoder-only arch has no decode step"
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch; 500k context needs sub-quadratic attention"
+    return True, ""

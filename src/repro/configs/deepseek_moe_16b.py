@@ -1,0 +1,24 @@
+"""deepseek-moe-16b [moe] — 2 shared + 64 routed top-6, fine-grained experts.
+[arXiv:2401.06066; hf]
+
+All 28 layers are MoE per the assignment table (the HF release keeps layer 0
+dense; we follow the assignment table, noted as a deviation).
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b", family="moe",
+    n_layers=28, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1408, vocab=102400,
+    moe=MoEConfig(n_routed=64, top_k=6, n_shared=2, d_ff_expert=1408),
+    source="arXiv:2401.06066; hf",
+)
+
+REDUCED = ModelConfig(
+    name="deepseek-moe-16b-reduced", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=96, vocab=256,
+    moe=MoEConfig(n_routed=8, top_k=2, n_shared=1, d_ff_expert=96,
+                  capacity_factor=8.0),   # no-drop at smoke-test scale
+    source="reduced",
+)

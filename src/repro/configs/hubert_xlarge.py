@@ -1,0 +1,21 @@
+"""hubert-xlarge [audio] — encoder-only transformer backbone; the conv audio
+frontend is a STUB (input_specs provides precomputed frame embeddings).
+[arXiv:2106.07447; unverified]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge", family="encoder",
+    n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16,
+    d_ff=5120, vocab=504,
+    is_encoder=True, embed_inputs=True,
+    source="arXiv:2106.07447; unverified",
+)
+
+REDUCED = ModelConfig(
+    name="hubert-xlarge-reduced", family="encoder",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab=32,
+    is_encoder=True, embed_inputs=True,
+    source="reduced",
+)

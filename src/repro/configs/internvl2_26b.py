@@ -1,0 +1,20 @@
+"""internvl2-26b [vlm] — InternViT + InternLM2.  The vision frontend is a STUB
+(input_specs provides precomputed patch embeddings prepended to the text
+sequence); the 48L/6144 transformer backbone is the modeled compute.
+[arXiv:2404.16821; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b", family="vlm",
+    n_layers=48, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=16384, vocab=92553, n_patches=256, embed_inputs=False,
+    source="arXiv:2404.16821; hf",
+)
+
+REDUCED = ModelConfig(
+    name="internvl2-26b-reduced", family="vlm",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab=256, n_patches=8,
+    source="reduced",
+)

@@ -1,0 +1,25 @@
+"""mixtral-8x22b [moe] — 8 experts top-2, sliding-window attention.
+[arXiv:2401.04088; hf]
+
+8 experts do not divide the 16-way model axis, so experts are TP-sharded on
+their hidden dim (expert-TP) instead of expert-parallel.  SWA (window 4096)
+bounds the decode KV cache, making long_500k runnable.
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b", family="moe",
+    n_layers=56, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=16384, vocab=32768, sliding_window=4096,
+    moe=MoEConfig(n_routed=8, top_k=2, n_shared=0, d_ff_expert=16384),
+    source="arXiv:2401.04088; hf",
+)
+
+REDUCED = ModelConfig(
+    name="mixtral-8x22b-reduced", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab=256, sliding_window=64,
+    moe=MoEConfig(n_routed=4, top_k=2, n_shared=0, d_ff_expert=128,
+                  capacity_factor=8.0),   # no-drop at smoke-test scale
+    source="reduced",
+)

@@ -1,0 +1,16 @@
+"""phi3-medium-14b [dense] — RoPE SwiGLU GQA.  [arXiv:2404.14219; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-medium-14b", family="dense",
+    n_layers=40, d_model=5120, n_heads=40, n_kv_heads=10,
+    d_ff=17920, vocab=100352, rope_theta=1e4,
+    source="arXiv:2404.14219; unverified",
+)
+
+REDUCED = ModelConfig(
+    name="phi3-medium-14b-reduced", family="dense",
+    n_layers=2, d_model=80, n_heads=4, n_kv_heads=2,
+    d_ff=192, vocab=256, rope_theta=1e4,
+    source="reduced",
+)

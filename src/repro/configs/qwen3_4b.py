@@ -1,0 +1,16 @@
+"""qwen3-4b [dense] — qk_norm, GQA.  [hf:Qwen/Qwen3-8B; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-4b", family="dense",
+    n_layers=36, d_model=2560, n_heads=32, n_kv_heads=8,
+    d_ff=9728, vocab=151936, qk_norm=True,
+    source="hf:Qwen/Qwen3-8B; hf",
+)
+
+REDUCED = ModelConfig(
+    name="qwen3-4b-reduced", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab=256, qk_norm=True,
+    source="reduced",
+)

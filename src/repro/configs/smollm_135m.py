@@ -1,0 +1,21 @@
+"""smollm-135m [dense] — llama-arch small.  [hf:HuggingFaceTB/SmolLM-135M; hf]
+
+Heads (9) and kv heads (3) are not divisible by the 16-way model axis; the
+logical-axis rules fall back to replicating attention projections while still
+sharding the FFN (1536/16) and vocab.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-135m", family="dense",
+    n_layers=30, d_model=576, n_heads=9, n_kv_heads=3,
+    d_ff=1536, vocab=49152, rope_theta=1e4,
+    source="hf:HuggingFaceTB/SmolLM-135M; hf",
+)
+
+REDUCED = ModelConfig(
+    name="smollm-135m-reduced", family="dense",
+    n_layers=2, d_model=48, n_heads=3, n_kv_heads=1,
+    d_ff=128, vocab=256, rope_theta=1e4,
+    source="reduced",
+)

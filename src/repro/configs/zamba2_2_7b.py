@@ -1,0 +1,23 @@
+"""zamba2-2.7b [hybrid] — Mamba2 backbone + shared attention block applied
+every 6 layers (shared parameters, per-application KV cache).
+[arXiv:2411.15242; hf]
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b", family="hybrid",
+    n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32,
+    d_ff=10240, vocab=32000,
+    ssm=SSMConfig(d_state=64, head_dim=64, expand=2, conv_width=4, chunk=128),
+    hybrid_attn_every=6,
+    source="arXiv:2411.15242; hf",
+)
+
+REDUCED = ModelConfig(
+    name="zamba2-2.7b-reduced", family="hybrid",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab=256,
+    ssm=SSMConfig(d_state=16, head_dim=16, expand=2, conv_width=4, chunk=32),
+    hybrid_attn_every=2,
+    source="reduced",
+)

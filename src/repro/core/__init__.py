@@ -1,0 +1,28 @@
+"""BARISTA platform manager — the paper's contribution (§IV).
+
+Components (paper Fig. 4/5):
+  profiler        execution-time distribution estimation (MLE + K-S, p95)
+  latency_model   roofline-calibrated latency sampler per (arch x flavor)
+  forecast        Prophet forecaster + error compensator (Eqs. 2-5)
+  estimator       Algorithm 1 — cost-per-request greedy flavor selection
+  provisioner     Algorithm 2 — proactive horizontal scaling w/ registries
+  vertical        reactive vertical scaler (SLO-miss double / margin shrink)
+  lifecycle       4-state replica machine (Fig. 2) + setup times (Fig. 3)
+  cost, slo       slice flavor catalog + lease ledger; SLO spec + monitor
+"""
+from repro.core.cost import FLAVORS, LeaseLedger, SliceFlavor, get_flavor
+from repro.core.estimator import (Estimate, FlavorProfile, dp_optimal_cost,
+                                  naive_estimation, resource_estimation)
+from repro.core.latency_model import (LatencySampler, RequestShape,
+                                      base_latency, flavor_feasible,
+                                      min_mem_gib, serve_roofline_terms)
+from repro.core.lifecycle import (Replica, ReplicaSet, SetupTimes, State,
+                                  setup_times_for)
+from repro.core.profiler import (LatencyProfile, ServiceProfiler,
+                                 fit_best_distribution, ks_statistic)
+from repro.core.provisioner import (ProvisionerConfig, Registry,
+                                    ResourceProvisioner)
+from repro.core.slo import LatencyMonitor, ServiceSpec, SLOSpec
+from repro.core.vertical import VerticalConfig, VerticalScaler
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,83 @@
+"""TPU slice flavor catalog — the hardware-adapted analogue of the paper's
+EC2 VM configurations (§III-B).
+
+A *slice flavor* is a TP group of ``p`` chips a serving replica runs on:
+  p chips, p x 16 GiB HBM, cost = p x chip-hour rate x overhead(p).
+
+The overhead factor is super-linear in p (larger slices carry interconnect
+and scheduling premium), mirroring EC2's non-linear price ladder that makes
+the paper's Fig. 11 effect possible: the most powerful flavor is rarely the
+cheapest per request.  On TPU the effect is compounded by sub-linear TP
+speedup (collective term grows with p) — captured by the latency model in
+``repro.core.latency_model``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+HBM_PER_CHIP_GIB = 16.0
+CHIP_HOUR_USD = 1.20          # v5e on-demand-like rate
+
+# interconnect/management premium by slice size (non-linear, EC2-style)
+_OVERHEAD = {1: 1.00, 2: 1.03, 4: 1.08, 8: 1.16, 16: 1.28}
+
+
+@dataclasses.dataclass(frozen=True)
+class SliceFlavor:
+    """One leasable resource configuration (paper: vm_i = (p_i, mem_i,
+    cost_i))."""
+    name: str
+    chips: int                   # p_i — cores in the paper
+    hbm_gib: float               # mem_i
+    cost_per_hour: float         # cost_i (running + management)
+
+    @property
+    def cost_per_second(self) -> float:
+        return self.cost_per_hour / 3600.0
+
+
+def default_catalog() -> Tuple[SliceFlavor, ...]:
+    out = []
+    for p, ov in sorted(_OVERHEAD.items()):
+        out.append(SliceFlavor(
+            name=f"v5e-{p}",
+            chips=p,
+            hbm_gib=p * HBM_PER_CHIP_GIB,
+            cost_per_hour=round(p * CHIP_HOUR_USD * ov, 4)))
+    return tuple(out)
+
+
+FLAVORS: Tuple[SliceFlavor, ...] = default_catalog()
+
+
+def get_flavor(name: str) -> SliceFlavor:
+    for f in FLAVORS:
+        if f.name == name:
+            return f
+    raise KeyError(f"unknown flavor {name!r}; have {[f.name for f in FLAVORS]}")
+
+
+@dataclasses.dataclass
+class LeaseLedger:
+    """Tracks deployment cost under the paper's minimum-lease model: a
+    deployed slice is paid for at least tau_vm seconds even if idle
+    (§III-A).  ``charge`` is called when the lease is opened or renewed."""
+    tau_vm: float = 3600.0                     # paper: instance hour
+    total_usd: float = 0.0
+    open_leases: Dict[int, Tuple[float, SliceFlavor]] = dataclasses.field(
+        default_factory=dict)                  # replica id -> (expiry, flavor)
+
+    def open(self, replica_id: int, flavor: SliceFlavor, now: float) -> float:
+        """Open (or renew) a lease; returns the expiry time."""
+        expiry = now + self.tau_vm
+        self.open_leases[replica_id] = (expiry, flavor)
+        self.total_usd += flavor.cost_per_second * self.tau_vm
+        return expiry
+
+    def close(self, replica_id: int) -> None:
+        self.open_leases.pop(replica_id, None)
+
+    def expiry(self, replica_id: int) -> Optional[float]:
+        lease = self.open_leases.get(replica_id)
+        return lease[0] if lease else None

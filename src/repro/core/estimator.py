@@ -1,0 +1,142 @@
+"""Resource Estimation — the paper's Algorithm 1 (§IV-D), plus an exact DP
+oracle used by the tests to verify the additive-optimality bound (Eq. 7).
+
+Given an SLO bound ``lambda_s``, per-flavor p95 execution times ``t_p`` and
+the flavor catalog, each flavor can serve
+
+    n_req_i = floor(lambda / t_p_i)      if mem_i >= min_mem else 0
+
+requests back-to-back within the latency bound (requests on one replica run
+sequentially; the paper's VMs serve one request at a time).  The greedy
+heuristic picks the flavor with minimum cost-per-request cpr_i =
+cost_i / n_req_i (ties -> cheaper flavor) and deploys
+
+    alpha = ceil(y' / n_req_{i*})
+
+replicas for a forecasted per-window demand y'.  Eq. 7 guarantees
+total_cost <= total_cost* + cost_{i*} where total_cost* is the rational
+lower bound; the DP oracle below computes the true integral optimum so the
+tests can check the (stronger) integral gap too.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.cost import SliceFlavor
+
+
+@dataclasses.dataclass(frozen=True)
+class FlavorProfile:
+    """Everything Algorithm 1 needs to know about one flavor for one
+    service: the profiled p95 latency and the memory feasibility verdict."""
+    flavor: SliceFlavor
+    t_p95: float                 # seconds per request (p95 of best-fit dist)
+    feasible: bool               # mem_i >= min_mem (HBM capacity on TPU)
+
+    def n_req(self, lambda_s: float) -> int:
+        if not self.feasible or self.t_p95 <= 0:
+            return 0
+        return int(math.floor(lambda_s / self.t_p95))
+
+
+@dataclasses.dataclass(frozen=True)
+class Estimate:
+    """Output of Algorithm 1."""
+    flavor: SliceFlavor
+    n_req: int                   # requests one replica serves per window
+    cpr: float                   # cost per request of the chosen flavor
+    alpha: int                   # replicas to deploy
+    total_cost: float            # alpha * cost_i*  (per lease period)
+    rational_lower_bound: float  # Eq. 6
+
+    def scaled(self, y_prime: float) -> "Estimate":
+        """Re-derive alpha for a new forecast, flavor unchanged (Alg. 2
+        recomputes alpha each tick; the flavor choice is sticky)."""
+        alpha = max(0, math.ceil(max(y_prime, 0.0) / self.n_req))
+        return dataclasses.replace(
+            self, alpha=alpha,
+            total_cost=alpha * self.flavor.cost_per_hour,
+            rational_lower_bound=(max(y_prime, 0.0) / self.n_req)
+            * self.flavor.cost_per_hour)
+
+
+def resource_estimation(y_prime: float, lambda_s: float,
+                        profiles: Sequence[FlavorProfile]) -> Estimate:
+    """Algorithm 1, line for line: scan flavors, track min cost-per-request
+    with cheaper-cost tie-break, deploy ceil(y'/n_req*)."""
+    i_star: Optional[FlavorProfile] = None
+    cpr_star = math.inf
+    cost_star = math.inf
+    n_req_star = 0
+    for prof in profiles:                               # lines 2-20
+        n_req_i = prof.n_req(lambda_s)                  # line 7 (+ mem gate)
+        if n_req_i <= 0:
+            continue
+        cpr_i = prof.flavor.cost_per_hour / n_req_i     # line 8
+        if cpr_i < cpr_star:                            # lines 9-13
+            i_star, cpr_star = prof, cpr_i
+            n_req_star, cost_star = n_req_i, prof.flavor.cost_per_hour
+        elif cpr_i == cpr_star and \
+                prof.flavor.cost_per_hour < cost_star:  # lines 14-18
+            i_star, n_req_star = prof, n_req_i
+            cost_star = prof.flavor.cost_per_hour
+    if i_star is None:
+        raise ValueError(
+            "no feasible flavor: every configuration violates min_mem or "
+            f"cannot serve a single request within lambda={lambda_s}s")
+    y = max(y_prime, 0.0)
+    alpha = int(math.ceil(y / n_req_star))              # line 21
+    return Estimate(
+        flavor=i_star.flavor, n_req=n_req_star, cpr=cpr_star, alpha=alpha,
+        total_cost=alpha * i_star.flavor.cost_per_hour,
+        rational_lower_bound=(y / n_req_star) * i_star.flavor.cost_per_hour)
+
+
+def naive_estimation(y_prime: float, lambda_s: float,
+                     profiles: Sequence[FlavorProfile],
+                     policy: str = "biggest") -> Estimate:
+    """The paper's naive baselines for Fig. 11: always pick the most
+    powerful ('biggest') or the cheapest-listed ('smallest') feasible
+    flavor, regardless of cost-per-request."""
+    feas = [p for p in profiles if p.n_req(lambda_s) > 0]
+    if not feas:
+        raise ValueError("no feasible flavor")
+    key = (lambda p: p.flavor.chips) if policy == "biggest" \
+        else (lambda p: -p.flavor.chips)
+    prof = max(feas, key=key)
+    n_req = prof.n_req(lambda_s)
+    y = max(y_prime, 0.0)
+    alpha = int(math.ceil(y / n_req))
+    return Estimate(
+        flavor=prof.flavor, n_req=n_req,
+        cpr=prof.flavor.cost_per_hour / n_req, alpha=alpha,
+        total_cost=alpha * prof.flavor.cost_per_hour,
+        rational_lower_bound=(y / n_req) * prof.flavor.cost_per_hour)
+
+
+# ---------------------------------------------------------------------------
+# exact integral optimum (tests only — the problem is NP-hard in general)
+# ---------------------------------------------------------------------------
+
+def dp_optimal_cost(y_prime: int, lambda_s: float,
+                    profiles: Sequence[FlavorProfile]) -> float:
+    """Minimum total cost of ANY mixed-flavor deployment covering y_prime
+    requests: unbounded covering DP over demand.  cost[d] = min over i of
+    cost[d - n_req_i] + cost_i."""
+    items = [(p.n_req(lambda_s), p.flavor.cost_per_hour)
+             for p in profiles if p.n_req(lambda_s) > 0]
+    if not items:
+        raise ValueError("no feasible flavor")
+    demand = max(int(math.ceil(y_prime)), 0)
+    if demand == 0:
+        return 0.0
+    INF = math.inf
+    best = [0.0] + [INF] * demand
+    for d in range(1, demand + 1):
+        for n_req, cost in items:
+            prev = best[max(d - n_req, 0)]
+            if prev + cost < best[d]:
+                best[d] = prev + cost
+    return best[demand]

@@ -1,0 +1,7 @@
+from repro.core.forecast.compensator import (GBTRegressor, MLPRegressor,
+                                             RidgeRegressor, automl_select,
+                                             build_features)
+from repro.core.forecast.forecaster import BaristaForecaster, ForecasterConfig
+from repro.core.forecast.prophet import Prophet, ProphetConfig
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,246 @@
+"""Compensator (paper §IV-C.2, Eq. 5):  y' = c(y, y_upp, y_low, E).
+
+Adjusts each Prophet forecast from the last m=5 forecast errors.  The paper
+used H2O AutoML, which selected XGBoost; offline we implement
+  * ``GBTRegressor``  — histogram gradient-boosted trees (numpy),
+  * ``MLPRegressor``  — 2-hidden-layer MLP (JAX, Adam),
+  * ``RidgeRegressor``— linear fallback,
+and ``automl_select`` picks the best validation-MAE model ("automl-lite").
+Feature vector per step: [yhat, y_low, y_upp, e_1..e_m] (same as the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# histogram gradient-boosted trees (squared loss)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Node:
+    feature: int = -1
+    threshold: float = 0.0
+    left: int = -1
+    right: int = -1
+    value: float = 0.0
+
+
+class GBTRegressor:
+    def __init__(self, n_trees: int = 120, max_depth: int = 3,
+                 lr: float = 0.08, n_bins: int = 64,
+                 min_leaf: int = 20, subsample: float = 0.9, seed: int = 0):
+        self.n_trees, self.max_depth, self.lr = n_trees, max_depth, lr
+        self.n_bins, self.min_leaf, self.subsample = n_bins, min_leaf, subsample
+        self.seed = seed
+        self.trees: List[List[_Node]] = []
+        self.base = 0.0
+
+    # -- single tree ---------------------------------------------------------
+    def _fit_tree(self, X, r, rng) -> List[_Node]:
+        n, d = X.shape
+        nodes: List[_Node] = [_Node()]
+        idx_sets = {0: np.arange(n)}
+        depth = {0: 0}
+        frontier = [0]
+        while frontier:
+            nid = frontier.pop()
+            idx = idx_sets.pop(nid)
+            node = nodes[nid]
+            node.value = float(np.mean(r[idx])) if len(idx) else 0.0
+            if depth[nid] >= self.max_depth or len(idx) < 2 * self.min_leaf:
+                continue
+            best = (0.0, -1, 0.0)  # gain, feature, threshold
+            total_sum, total_cnt = r[idx].sum(), len(idx)
+            for f in range(d):
+                xs = X[idx, f]
+                lo, hi = xs.min(), xs.max()
+                if hi <= lo:
+                    continue
+                bins = np.linspace(lo, hi, self.n_bins + 1)[1:-1]
+                which = np.searchsorted(bins, xs)
+                sums = np.bincount(which, weights=r[idx],
+                                   minlength=self.n_bins)
+                cnts = np.bincount(which, minlength=self.n_bins)
+                csum, ccnt = np.cumsum(sums), np.cumsum(cnts)
+                for b in range(self.n_bins - 1):
+                    nl, sl = ccnt[b], csum[b]
+                    nr_, sr = total_cnt - nl, total_sum - csum[b]
+                    if nl < self.min_leaf or nr_ < self.min_leaf:
+                        continue
+                    gain = sl * sl / nl + sr * sr / nr_ \
+                        - total_sum * total_sum / total_cnt
+                    if gain > best[0]:
+                        best = (gain, f, bins[b] if b < len(bins) else hi)
+            if best[1] < 0:
+                continue
+            f, thr = best[1], best[2]
+            mask = X[idx, f] <= thr
+            li, ri = len(nodes), len(nodes) + 1
+            nodes += [_Node(), _Node()]
+            node.feature, node.threshold = f, thr
+            node.left, node.right = li, ri
+            idx_sets[li], idx_sets[ri] = idx[mask], idx[~mask]
+            depth[li] = depth[ri] = depth[nid] + 1
+            frontier += [li, ri]
+        return nodes
+
+    def _tree_predict(self, nodes: List[_Node], X) -> np.ndarray:
+        out = np.zeros(len(X))
+        for i, x in enumerate(X):
+            nid = 0
+            while nodes[nid].left >= 0:
+                nid = (nodes[nid].left if x[nodes[nid].feature]
+                       <= nodes[nid].threshold else nodes[nid].right)
+            out[i] = nodes[nid].value
+        return out
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "GBTRegressor":
+        X = np.asarray(X, np.float64)
+        y = np.asarray(y, np.float64)
+        rng = np.random.default_rng(self.seed)
+        self.base = float(np.mean(y))
+        pred = np.full(len(y), self.base)
+        self.trees = []
+        for _ in range(self.n_trees):
+            r = y - pred
+            if self.subsample < 1.0:
+                sub = rng.random(len(y)) < self.subsample
+                tree = self._fit_tree(X[sub], r[sub], rng)
+            else:
+                tree = self._fit_tree(X, r, rng)
+            self.trees.append(tree)
+            pred += self.lr * self._tree_predict(tree, X)
+        return self
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        X = np.asarray(X, np.float64)
+        pred = np.full(len(X), self.base)
+        for tree in self.trees:
+            pred += self.lr * self._tree_predict(tree, X)
+        return pred
+
+
+# ---------------------------------------------------------------------------
+# JAX MLP
+# ---------------------------------------------------------------------------
+
+class MLPRegressor:
+    def __init__(self, hidden: Tuple[int, int] = (64, 32), steps: int = 800,
+                 lr: float = 3e-3, seed: int = 0):
+        self.hidden, self.steps, self.lr, self.seed = hidden, steps, lr, seed
+        self.params = None
+        self._mu_x = self._sd_x = self._mu_y = self._sd_y = None
+
+    def _init(self, d):
+        key = jax.random.key(self.seed)
+        ks = jax.random.split(key, 3)
+        h1, h2 = self.hidden
+        return {
+            "w1": jax.random.normal(ks[0], (d, h1)) * (d ** -0.5),
+            "b1": jnp.zeros((h1,)),
+            "w2": jax.random.normal(ks[1], (h1, h2)) * (h1 ** -0.5),
+            "b2": jnp.zeros((h2,)),
+            "w3": jax.random.normal(ks[2], (h2, 1)) * (h2 ** -0.5),
+            "b3": jnp.zeros((1,)),
+        }
+
+    @staticmethod
+    @jax.jit
+    def _forward(params, X):
+        h = jax.nn.gelu(X @ params["w1"] + params["b1"])
+        h = jax.nn.gelu(h @ params["w2"] + params["b2"])
+        return (h @ params["w3"] + params["b3"])[:, 0]
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "MLPRegressor":
+        X = np.asarray(X, np.float32)
+        y = np.asarray(y, np.float32)
+        self._mu_x, self._sd_x = X.mean(0), X.std(0) + 1e-9
+        self._mu_y, self._sd_y = y.mean(), y.std() + 1e-9
+        Xn = jnp.asarray((X - self._mu_x) / self._sd_x)
+        yn = jnp.asarray((y - self._mu_y) / self._sd_y)
+        params = self._init(X.shape[1])
+
+        @jax.jit
+        def run(params):
+            def loss_fn(p):
+                return jnp.mean(jnp.square(self._forward(p, Xn) - yn))
+
+            def step(carry, _):
+                p, m, v, i = carry
+                loss, g = jax.value_and_grad(loss_fn)(p)
+                i = i + 1
+                m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+                v = jax.tree.map(
+                    lambda a, b: 0.999 * a + 0.001 * jnp.square(b), v, g)
+                mh = jax.tree.map(lambda a: a / (1 - 0.9 ** i), m)
+                vh = jax.tree.map(lambda a: a / (1 - 0.999 ** i), v)
+                p = jax.tree.map(
+                    lambda pp, a, b: pp - self.lr * a / (jnp.sqrt(b) + 1e-8),
+                    p, mh, vh)
+                return (p, m, v, i), loss
+
+            z = jax.tree.map(jnp.zeros_like, params)
+            (p, _, _, _), _ = jax.lax.scan(
+                step, (params, z, jax.tree.map(jnp.zeros_like, params), 0.0),
+                None, length=self.steps)
+            return p
+
+        self.params = run(params)
+        return self
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        Xn = (np.asarray(X, np.float32) - self._mu_x) / self._sd_x
+        yn = np.asarray(self._forward(self.params, jnp.asarray(Xn)))
+        return yn * self._sd_y + self._mu_y
+
+
+class RidgeRegressor:
+    def __init__(self, alpha: float = 1.0):
+        self.alpha = alpha
+        self.w = None
+
+    def fit(self, X, y):
+        X = np.asarray(X, np.float64)
+        Xb = np.concatenate([X, np.ones((len(X), 1))], 1)
+        A = Xb.T @ Xb + self.alpha * np.eye(Xb.shape[1])
+        self.w = np.linalg.solve(A, Xb.T @ np.asarray(y, np.float64))
+        return self
+
+    def predict(self, X):
+        X = np.asarray(X, np.float64)
+        return np.concatenate([X, np.ones((len(X), 1))], 1) @ self.w
+
+
+# ---------------------------------------------------------------------------
+# automl-lite
+# ---------------------------------------------------------------------------
+
+def automl_select(X_tr, y_tr, X_val, y_val, seed: int = 0):
+    """Train candidates, return (best_model, report) by validation MAE."""
+    candidates = {
+        "gbt": GBTRegressor(seed=seed),
+        "mlp": MLPRegressor(seed=seed),
+        "ridge": RidgeRegressor(),
+    }
+    report = {}
+    best_name, best_mae, best_model = None, np.inf, None
+    for name, model in candidates.items():
+        model.fit(X_tr, y_tr)
+        mae = float(np.mean(np.abs(model.predict(X_val) - y_val)))
+        report[name] = mae
+        if mae < best_mae:
+            best_name, best_mae, best_model = name, mae, model
+    return best_model, {"chosen": best_name, "val_mae": report}
+
+
+def build_features(yhat: np.ndarray, y_low: np.ndarray, y_upp: np.ndarray,
+                   errors: np.ndarray) -> np.ndarray:
+    """Feature matrix: [yhat, y_low, y_upp, e_1..e_m] per row (Eq. 5)."""
+    return np.concatenate(
+        [yhat[:, None], y_low[:, None], y_upp[:, None], errors], axis=1)

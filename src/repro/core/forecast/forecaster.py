@@ -1,0 +1,150 @@
+"""Barista Request Forecaster (paper §IV-A item 3 + §IV-C).
+
+Online operation: every minute the forecaster
+  1. receives the actual request count from the Request Monitor,
+  2. updates its error history (last m=5 forecast errors),
+  3. emits a compensated forecast t'_setup minutes ahead:
+         y'(t+h) = c(yhat, y_low, y_upp, E)      (Eq. 5)
+Prophet refits on a rolling window every ``refit_every`` minutes; the
+compensator trains once on a held-out slice of Prophet's own forecasts
+(paper: 3000 points train / 1000 test) and is reused online.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.forecast.compensator import automl_select, build_features
+from repro.core.forecast.prophet import Prophet, ProphetConfig
+
+
+@dataclasses.dataclass
+class ForecasterConfig:
+    window: int = 6000          # rolling training window (paper: W=6000)
+    refit_every: int = 240      # minutes between Prophet refits
+    n_errors: int = 5           # m in Eq. 5 (paper: last five errors)
+    horizon: int = 10           # default t'_setup lookahead, minutes
+    compensator_train: int = 3000
+    compensator_val: int = 500
+    prophet: ProphetConfig = ProphetConfig()
+
+
+class BaristaForecaster:
+    """Prophet + error compensator with rolling refit (the paper's Request
+    Forecaster).  Also usable in pure-Prophet mode for the baseline."""
+
+    def __init__(self, cfg: ForecasterConfig = ForecasterConfig(),
+                 holidays=None, use_compensator: bool = True, seed: int = 0):
+        self.cfg = cfg
+        self.holidays = holidays
+        self.use_compensator = use_compensator
+        self.seed = seed
+        self.prophet: Optional[Prophet] = None
+        self.compensator = None
+        self.automl_report: Optional[Dict] = None
+        self._t_hist: Deque[float] = deque(maxlen=cfg.window)
+        self._y_hist: Deque[float] = deque(maxlen=cfg.window)
+        self._errors: Deque[float] = deque([0.0] * cfg.n_errors,
+                                           maxlen=cfg.n_errors)
+        self._pending: Dict[float, float] = {}   # t -> forecast issued for t
+        self._last_fit_t: float = -np.inf
+
+    # ------------------------------------------------------------------ fit
+    def warm_start(self, t: np.ndarray, y: np.ndarray, horizon: int = 1):
+        """Offline phase: fit Prophet on history and train the compensator
+        on Prophet's own h-step-ahead forecasts (paper's offline phase).
+        ``horizon`` is the provisioning lookahead t'_setup in minutes."""
+        t = np.asarray(t, np.float64)
+        y = np.asarray(y, np.float64)
+        for ti, yi in zip(t, y):
+            self._t_hist.append(ti)
+            self._y_hist.append(yi)
+        self._fit_prophet(t[-1])
+        if self.use_compensator:
+            self._train_compensator(t, y, horizon)
+
+    def _fit_prophet(self, now: float):
+        th = np.asarray(self._t_hist)
+        yh = np.asarray(self._y_hist)
+        self.prophet = Prophet(self.cfg.prophet, self.holidays).fit(th, yh)
+        self._last_fit_t = now
+
+    def _train_compensator(self, t: np.ndarray, y: np.ndarray,
+                           horizon: int = 1):
+        m = self.cfg.n_errors
+        n = min(self.cfg.compensator_train + self.cfg.compensator_val,
+                len(t) - m - horizon)
+        t_c, y_c = t[-n:], y[-n:]
+        yhat, lo, up = self.prophet.predict(t_c)
+        err = yhat - y_c                                # signed error
+        start = m + horizon - 1
+        rows = len(t_c) - start
+        # row i predicts y[start+i] from the m errors materialized by then
+        errs = np.stack([err[i - horizon - m + 1: i - horizon + 1]
+                         for i in range(start, len(t_c))])
+        X = build_features(yhat[start:], lo[start:], up[start:], errs)
+        target = y_c[start:]
+        n_val = min(self.cfg.compensator_val, rows // 5)
+        self.compensator, self.automl_report = automl_select(
+            X[:-n_val], target[:-n_val], X[-n_val:], target[-n_val:],
+            seed=self.seed)
+
+    # --------------------------------------------------------------- online
+    def observe(self, t: float, actual: float):
+        """Request Monitor feed: actual per-minute count at time t."""
+        self._t_hist.append(t)
+        self._y_hist.append(actual)
+        if t in self._pending:
+            self._errors.append(self._pending.pop(t) - actual)
+        if t - self._last_fit_t >= self.cfg.refit_every:
+            self._fit_prophet(t)
+
+    def forecast(self, t_future: float) -> Tuple[float, float, float]:
+        """Compensated forecast for a single future minute."""
+        yhat, lo, up = self.prophet.predict(np.asarray([t_future]))
+        if self.use_compensator and self.compensator is not None:
+            errs = np.asarray(self._errors, np.float64)[None, :]
+            X = build_features(yhat, lo, up, errs)
+            y_corr = float(self.compensator.predict(X)[0])
+        else:
+            y_corr = float(yhat[0])
+        y_corr = max(y_corr, 0.0)
+        self._pending[t_future] = y_corr
+        return y_corr, float(lo[0]), float(up[0])
+
+    def forecast_path(self, t: np.ndarray) -> np.ndarray:
+        """Batch forecast (no error-state update) — evaluation use."""
+        yhat, lo, up = self.prophet.predict(np.asarray(t, np.float64))
+        if not (self.use_compensator and self.compensator is not None):
+            return np.maximum(yhat, 0.0)
+        errs = np.tile(np.asarray(self._errors)[None, :], (len(t), 1))
+        X = build_features(yhat, lo, up, errs)
+        return np.maximum(self.compensator.predict(X), 0.0)
+
+    def rolling_eval(self, t: np.ndarray, y: np.ndarray, horizon: int = 1
+                     ) -> np.ndarray:
+        """Online-faithful evaluation: at each minute i, forecast y[i] from
+        Prophet's value at t[i] plus the last m *materialized* errors
+        (errors lag by ``horizon`` — a t'_setup-ahead forecast can only use
+        errors of forecasts that have already come due).  Mirrors the
+        paper's runtime loop without mutating online state."""
+        t = np.asarray(t, np.float64)
+        y = np.asarray(y, np.float64)
+        yhat, lo, up = self.prophet.predict(t)
+        if not (self.use_compensator and self.compensator is not None):
+            return np.maximum(yhat, 0.0)
+        m = self.cfg.n_errors
+        err = yhat - y
+        out = np.maximum(yhat.copy(), 0.0)
+        start = m + horizon - 1
+        rows = len(t) - start
+        if rows <= 0:
+            return out
+        errs = np.stack([err[i - horizon - m + 1: i - horizon + 1]
+                         for i in range(start, len(t))])
+        X = build_features(yhat[start:], lo[start:], up[start:], errs)
+        out[start:] = np.maximum(self.compensator.predict(X), 0.0)
+        return out

@@ -1,0 +1,160 @@
+"""Decomposable time-series forecaster in JAX (paper §IV-C, Eqs. 2–4).
+
+    y(t) = g(t) + s(t) + h(t) + eps
+      g: logistic trend  C / (1 + exp(-k (t - m)))          (Eq. 3)
+      s: Fourier seasonality  sum_n a_n cos(2πnt/P) + b_n sin(2πnt/P)  (Eq. 4)
+         over multiple periods (daily + weekly by default)
+      h: per-holiday indicator effects
+
+Fit is MAP by Adam on jit-compiled MSE with ridge priors on the Fourier
+coefficients (Prophet's smoothing prior).  Uncertainty intervals come from
+residual quantiles on the training window (the paper consumes y_low/y_upp
+only as compensator features).  Rolling-window refits are cheap: the
+objective re-jits once per (window, order) shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ProphetConfig:
+    periods: Tuple[float, ...] = (1440.0, 10080.0)  # minutes: daily, weekly
+    fourier_order: int = 10                          # N in Eq. (4)
+    seasonality_prior: float = 10.0                  # ridge 1/prior^2
+    trend: str = "logistic"                          # 'logistic' | 'linear'
+    steps: int = 1200                                # Adam iterations
+    lr: float = 0.05
+    interval_q: float = 0.95
+
+
+def _design(t: jnp.ndarray, periods, order) -> jnp.ndarray:
+    """Fourier design matrix [T, 2*order*len(periods)]."""
+    cols = []
+    for P in periods:
+        n = jnp.arange(1, order + 1, dtype=jnp.float32)
+        ang = 2.0 * jnp.pi * t[:, None] * n[None, :] / P
+        cols += [jnp.cos(ang), jnp.sin(ang)]
+    return jnp.concatenate(cols, axis=1)
+
+
+def _trend(params, tn, kind: str):
+    """tn: time normalized to [0, 1] (Prophet-style scaling keeps the
+    logistic exponent bounded so MAP fitting cannot overflow)."""
+    if kind == "logistic":
+        C = jax.nn.softplus(params["cap"])           # keep capacity positive
+        z = jnp.clip(params["k"] * (tn - params["m"]), -30.0, 30.0)
+        return C / (1.0 + jnp.exp(-z))
+    return params["k"] * tn + params["m"]
+
+
+def _predict_params(params, t, tn, hol, cfg: ProphetConfig):
+    X = _design(t, cfg.periods, cfg.fourier_order)
+    s = X @ params["beta"]
+    h = hol @ params["gamma"] if hol is not None and hol.shape[1] else 0.0
+    return _trend(params, tn, cfg.trend) + s + h
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _fit_jit(t, tn, y, hol, init, cfg: ProphetConfig):
+    def loss_fn(params):
+        pred = _predict_params(params, t, tn, hol, cfg)
+        mse = jnp.mean(jnp.square(pred - y))
+        ridge = jnp.sum(jnp.square(params["beta"])) / (
+            cfg.seasonality_prior ** 2)
+        hridge = jnp.sum(jnp.square(params["gamma"])) / 100.0
+        return mse + ridge + hridge
+
+    # Adam
+    grads_fn = jax.value_and_grad(loss_fn)
+
+    def step(carry, _):
+        params, m, v, i = carry
+        loss, g = grads_fn(params)
+        i = i + 1
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * jnp.square(b), v, g)
+        mh = jax.tree.map(lambda a: a / (1 - 0.9 ** i), m)
+        vh = jax.tree.map(lambda a: a / (1 - 0.999 ** i), v)
+        params = jax.tree.map(
+            lambda p, a, b: p - cfg.lr * a / (jnp.sqrt(b) + 1e-8),
+            params, mh, vh)
+        return (params, m, v, i), loss
+
+    zeros = jax.tree.map(jnp.zeros_like, init)
+    (params, _, _, _), losses = jax.lax.scan(
+        step, (init, zeros, jax.tree.map(jnp.zeros_like, init), 0.0),
+        None, length=cfg.steps)
+    return params, losses
+
+
+class Prophet:
+    """Forecaster component (paper's Forecaster, built on Eqs. 2–4)."""
+
+    def __init__(self, cfg: ProphetConfig = ProphetConfig(),
+                 holidays: Optional[Sequence[Tuple[float, float]]] = None):
+        """holidays: list of (start_minute, end_minute) windows."""
+        self.cfg = cfg
+        self.holidays = list(holidays or [])
+        self.params = None
+        self._resid_q: Tuple[float, float] = (0.0, 0.0)
+        self._t_scale = 1.0
+
+    # -- holiday indicator matrix ------------------------------------------
+    def _hol_matrix(self, t: np.ndarray) -> jnp.ndarray:
+        H = len(self.holidays)
+        out = np.zeros((len(t), H), np.float32)
+        for j, (a, b) in enumerate(self.holidays):
+            out[:, j] = ((t >= a) & (t < b)).astype(np.float32)
+        return jnp.asarray(out)
+
+    def fit(self, t: np.ndarray, y: np.ndarray) -> "Prophet":
+        t = np.asarray(t, np.float32)
+        y = np.asarray(y, np.float32)
+        # Prophet-style scaling: time to [0,1], y to [0,1]
+        self._t0 = float(t[0])
+        self._t_scale = max(float(t[-1] - t[0]), 1.0)
+        self._y_scale = max(float(np.max(np.abs(y))), 1.0)
+        tn = (t - self._t0) / self._t_scale
+        yn = y / self._y_scale
+        nF = 2 * self.cfg.fourier_order * len(self.cfg.periods)
+        init = {
+            "cap": jnp.asarray(1.0, jnp.float32),    # softplus(1.0) ~ 1.31
+            "k": jnp.asarray(1.0 if self.cfg.trend == "logistic" else 0.0,
+                             jnp.float32),
+            "m": jnp.asarray(0.5 if self.cfg.trend == "logistic"
+                             else float(np.mean(yn)), jnp.float32),
+            "beta": jnp.zeros((nF,), jnp.float32),
+            "gamma": jnp.zeros((len(self.holidays),), jnp.float32),
+        }
+        hol = self._hol_matrix(t)
+        self.params, losses = _fit_jit(
+            jnp.asarray(t), jnp.asarray(tn), jnp.asarray(yn), hol, init,
+            self.cfg)
+        resid = np.asarray(_predict_params(
+            self.params, jnp.asarray(t), jnp.asarray(tn), hol, self.cfg)
+        ) * self._y_scale - y
+        q = self.cfg.interval_q
+        self._resid_q = (float(np.quantile(resid, 1 - q)),
+                         float(np.quantile(resid, q)))
+        self._final_loss = float(losses[-1])
+        return self
+
+    def predict(self, t: np.ndarray
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Returns (yhat, y_low, y_upp)."""
+        assert self.params is not None, "fit first"
+        t = np.asarray(t, np.float32)
+        tn = (t - self._t0) / self._t_scale
+        hol = self._hol_matrix(t)
+        yhat = np.asarray(_predict_params(
+            self.params, jnp.asarray(t), jnp.asarray(tn), hol, self.cfg)
+        ) * self._y_scale
+        lo, hi = self._resid_q
+        return yhat, yhat + lo, yhat + hi

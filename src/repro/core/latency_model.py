@@ -1,0 +1,190 @@
+"""Roofline-calibrated execution-time model per (service, slice flavor).
+
+The paper profiles each model on each VM flavor with 10k trial runs (Fig. 1)
+and fits a parametric distribution (§IV-B).  We target TPU, and this
+container is CPU-only — so the *sampler* is swapped: per-request latency on
+a p-chip TP slice is derived from the same three-term roofline used by the
+dry-run analysis (compute / HBM / ICI-collective), calibrated by the
+compiled dry-run's useful-FLOPs fraction when a record is available, with
+multiplicative lognormal service jitter + a gamma dispatch component.  On
+real hardware the sampler is replaced by wall-clock measurement; everything
+downstream (MLE fits, K-S ranking, p95, Algorithm 1) is unchanged.
+
+Speedup with chips is sub-linear: compute and HBM terms fall ~1/p while the
+TP all-reduce term grows with (p-1)/p — reproducing the paper's core
+observation that the most powerful flavor is not always cheapest per
+request (Fig. 11).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.core.cost import HBM_PER_CHIP_GIB, SliceFlavor
+from repro.roofline.analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+
+BYTES_PER_PARAM = 2            # bf16 serving weights
+DISPATCH_OVERHEAD_S = 1e-3     # per-program launch cost
+INTERFERENCE = 1.20            # co-located batch jobs (paper: 20% worst case)
+
+
+# ---------------------------------------------------------------------------
+# analytic per-request roofline
+# ---------------------------------------------------------------------------
+
+def _attn_layers(cfg: ModelConfig) -> int:
+    if cfg.family == "ssm":
+        return 0
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.hybrid_attn_every
+    return cfg.n_layers
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestShape:
+    seq: int                   # prompt tokens per request
+    decode_tokens: int = 0     # autoregressive tokens after prefill
+
+
+def serve_roofline_terms(cfg: ModelConfig, shape: RequestShape, p: int
+                         ) -> Tuple[float, float, float]:
+    """(compute_s, memory_s, collective_s) for ONE request on a p-chip TP
+    slice (batch 1)."""
+    n_active = cfg.active_param_count()
+    S, G = shape.seq, shape.decode_tokens
+    d, L = cfg.d_model, cfg.n_layers
+    La = _attn_layers(cfg)
+    w = cfg.sliding_window or 0
+
+    # -- prefill -----------------------------------------------------------
+    flops = 2.0 * n_active * S
+    if La:
+        eff_s = min(S, w) if w else S
+        flops += 4.0 * La * S * eff_s * d * 0.5     # causal half, QK^T + PV
+    wbytes = BYTES_PER_PARAM * n_active             # weights read once
+    abytes = 12.0 * S * d * L * BYTES_PER_PARAM     # activations + KV traffic
+    # TP collectives: 2 all-reduces of the [S, d] residual per layer (ring)
+    cbytes = 2.0 * L * (S * d * BYTES_PER_PARAM) * 2.0 * (p - 1) / p
+
+    # -- decode (each step re-reads the weights; KV grows with position) ----
+    if G:
+        flops += 2.0 * n_active * G
+        kv_layers = La if La else 0
+        kv_len = min(S + G, w) if w else (S + G)
+        kv_row = 2 * cfg.n_kv_heads * cfg.head_dim * BYTES_PER_PARAM
+        wbytes += G * BYTES_PER_PARAM * n_active
+        abytes += G * kv_layers * kv_len * kv_row
+        cbytes += G * 2.0 * L * (d * BYTES_PER_PARAM) * 2.0 * (p - 1) / p
+
+    compute_s = flops / (p * PEAK_FLOPS)
+    memory_s = (wbytes + abytes) / (p * HBM_BW)
+    # cbytes already carries the ring factor 2(p-1)/p per device; ring
+    # all-reduce time does NOT shrink with p (the reduced tensor is the
+    # full activation) — this is what makes TP speedup sub-linear
+    collective_s = cbytes / ICI_BW
+    return compute_s, memory_s, collective_s
+
+
+def base_latency(cfg: ModelConfig, shape: RequestShape, p: int,
+                 flops_efficiency: float = 0.55,
+                 steps: Optional[int] = None) -> float:
+    """Deterministic roofline latency for one request on p chips.
+
+    ``flops_efficiency`` discounts the peak-FLOPs term for compiled-program
+    overheads (calibrated against the dry-run's useful-FLOPs fraction when
+    available; 0.55 is the fleet median).  Compute and HBM traffic overlap
+    (max); the ICI term adds (serialized worst case).
+    """
+    c, m, coll = serve_roofline_terms(cfg, shape, p)
+    n_launch = 1 + (steps if steps is not None else shape.decode_tokens)
+    return max(c / max(flops_efficiency, 1e-3), m) + coll \
+        + DISPATCH_OVERHEAD_S * n_launch
+
+
+def min_mem_gib(cfg: ModelConfig, shape: RequestShape, batch: int = 1
+                ) -> float:
+    """Weights + KV working set — the paper's min_mem constraint, which on
+    TPU becomes a hard HBM-capacity feasibility bound."""
+    wbytes = BYTES_PER_PARAM * cfg.param_count()
+    kv_len = shape.seq + shape.decode_tokens
+    if cfg.sliding_window:
+        kv_len = min(kv_len, cfg.sliding_window)
+    kv_row = 2 * cfg.n_kv_heads * cfg.head_dim * BYTES_PER_PARAM
+    kv = batch * _attn_layers(cfg) * kv_len * kv_row
+    ssm = 0.0
+    if cfg.ssm is not None:
+        s = cfg.ssm
+        d_in = s.expand * cfg.d_model
+        ssm = batch * cfg.n_layers * (d_in // s.head_dim) \
+            * s.head_dim * s.d_state * 4.0
+    return (wbytes + kv + ssm) * 1.25 / 2 ** 30      # 25% runtime headroom
+
+
+def flavor_feasible(cfg: ModelConfig, shape: RequestShape,
+                    flavor: SliceFlavor) -> bool:
+    return flavor.hbm_gib >= min_mem_gib(cfg, shape)
+
+
+# ---------------------------------------------------------------------------
+# the sampler the profiler consumes (stand-in for 10k wall-clock trials)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LatencySampler:
+    """Generates per-request latency samples for (arch, flavor).
+
+    base x LogNormal(0, sigma)  +  Gamma(k=2, theta=base*gamma_frac/2)
+    The lognormal models service-time variation (input-dependent compute,
+    clock variation); the gamma tail models dispatch/queueing jitter.  The
+    mixture means the best-fit family genuinely varies per service, which
+    exercises the paper's K-S ranking (Fig. 6) rather than trivializing it.
+
+    ``straggler_prob``: probability a request lands on a transiently slow
+    replica (preempted host, ECC scrub, network incast) and takes
+    ``straggler_mult`` x longer — the fleet-scale heavy tail that hedged
+    requests (serving/load_balancer.py) are designed to absorb.
+    """
+    sigma: float = 0.08
+    gamma_frac: float = 0.06
+    straggler_prob: float = 0.0
+    straggler_mult: float = 8.0
+    seed: int = 0
+
+    def sample(self, cfg: ModelConfig, shape: RequestShape, p: int,
+               n: int = 10_000, colocated: bool = False,
+               flops_efficiency: float = 0.55,
+               rng: Optional[np.random.Generator] = None) -> np.ndarray:
+        """Draw ``n`` samples.  Without an explicit ``rng`` the stream is
+        keyed by (arch, shape, p, seed) — deterministic per profile, which
+        is what offline profiling wants.  Online callers (the fleet
+        simulator's per-request service times) MUST pass a stateful rng or
+        every draw from one key returns the same value."""
+        if rng is None:
+            import zlib
+            key = f"{cfg.name}|{shape.seq}|{shape.decode_tokens}|{p}|" \
+                  f"{self.seed}"
+            rng = np.random.default_rng(zlib.crc32(key.encode()))
+        base = base_latency(cfg, shape, p, flops_efficiency)
+        if colocated:
+            base *= INTERFERENCE
+        logn = np.exp(rng.normal(0.0, self.sigma, n))
+        tail = rng.gamma(2.0, base * self.gamma_frac / 2.0, n)
+        out = base * logn + tail
+        if self.straggler_prob > 0:
+            slow = rng.random(n) < self.straggler_prob
+            out = np.where(slow, out * self.straggler_mult, out)
+        return out
+
+
+def calibrated_efficiency(dryrun_record: Optional[Dict]) -> float:
+    """useful_flops_frac from a compiled dry-run record, when available."""
+    if not dryrun_record:
+        return 0.55
+    rl = dryrun_record.get("roofline") or {}
+    f = rl.get("useful_flops_frac")
+    return float(min(max(f, 0.1), 1.0)) if f else 0.55

@@ -1,0 +1,145 @@
+"""Replica lifecycle — the paper's 4-state VM machine (Fig. 2), adapted to
+TPU slices:
+
+  VM Cold         slice not allocated
+  VM Warm         slice allocated, runtime up, serving image absent
+  Container Cold  server image pulled + program compiled, weights NOT in HBM
+  Container Warm  weights loaded — ready to serve
+
+Transition times (the paper's Fig. 3):
+  t_vm  slice allocation + runtime bring-up
+  t_cd  image pull + XLA compile of the serving program
+  t_ml  weights load: checkpoint bytes / host->HBM staging bandwidth
+  t_mu  unload (negligible — paper footnote 2)
+
+The provisioner must look t'_setup = t_vm + t_cd + t_ml + t_forecast ahead;
+these numbers are per-architecture (a 26B VLM loads ~50 GiB of weights, a
+135M model ~0.3 GiB), which is exactly why Barista tracks lifecycle state
+per replica instead of assuming a flat boot cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Dict, List, Optional
+
+from repro.configs.base import ModelConfig
+from repro.core.cost import SliceFlavor
+from repro.core.latency_model import BYTES_PER_PARAM
+
+
+class State(enum.Enum):
+    VM_COLD = "vm_cold"
+    VM_WARM = "vm_warm"
+    CONTAINER_COLD = "container_cold"
+    CONTAINER_WARM = "container_warm"
+
+
+# bring-up constants (TPU adaptation of the paper's OpenStack numbers)
+SLICE_ALLOC_S = 45.0           # t_vm: slice allocation + runtime bring-up
+IMAGE_PULL_S = 20.0            # image pull component of t_cd
+COMPILE_S_PER_GPARAM = 8.0     # XLA compile time scales with program size
+LOAD_BW_BYTES_S = 10e9         # host->HBM staging (PCIe/NIC bound)
+
+
+@dataclasses.dataclass(frozen=True)
+class SetupTimes:
+    t_vm: float
+    t_cd: float
+    t_ml: float
+    t_forecast: float = 1.0
+
+    @property
+    def t_setup(self) -> float:
+        return self.t_vm + self.t_cd + self.t_ml
+
+    @property
+    def t_setup_prime(self) -> float:      # t'_setup (paper §III-C)
+        return self.t_setup + self.t_forecast
+
+
+def setup_times_for(cfg: ModelConfig, flavor: Optional[SliceFlavor] = None,
+                    t_forecast: float = 1.0) -> SetupTimes:
+    """Per-architecture setup times (the paper's Fig. 3, derived instead of
+    measured: weights bytes / staging bandwidth, compile time ~ params)."""
+    n = cfg.param_count()
+    ckpt_bytes = BYTES_PER_PARAM * n
+    t_cd = IMAGE_PULL_S + COMPILE_S_PER_GPARAM * (n / 1e9)
+    t_ml = ckpt_bytes / LOAD_BW_BYTES_S
+    return SetupTimes(t_vm=SLICE_ALLOC_S, t_cd=round(t_cd, 2),
+                      t_ml=round(t_ml, 2), t_forecast=t_forecast)
+
+
+_TRANSITIONS = {
+    (State.VM_COLD, State.VM_WARM): "t_vm",
+    (State.VM_WARM, State.CONTAINER_COLD): "t_cd",
+    (State.CONTAINER_COLD, State.CONTAINER_WARM): "t_ml",
+    # unload is free (paper footnote 2); teardown time is ignored
+    (State.CONTAINER_WARM, State.CONTAINER_COLD): None,
+    (State.CONTAINER_WARM, State.VM_COLD): None,
+    (State.CONTAINER_COLD, State.VM_COLD): None,
+    (State.VM_WARM, State.VM_COLD): None,
+}
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class Replica:
+    """One leased slice hosting (at most) one serving container."""
+    flavor: SliceFlavor
+    service: str
+    id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    state: State = State.VM_COLD
+    ready_at: float = 0.0            # when the in-flight transition lands
+    lease_expiry: float = 0.0
+    chips_active: int = 0            # vertical scaling: chips serving
+    busy_until: float = 0.0          # data-plane occupancy
+    queue: int = 0                   # open connections (least-loaded LB key)
+    colocated_batch: bool = False    # spare chips host low-priority batch
+
+    def transition(self, to: State, now: float, times: SetupTimes) -> float:
+        """Start a legal transition; returns completion time."""
+        key = (self.state, to)
+        if key not in _TRANSITIONS:
+            raise ValueError(f"illegal transition {self.state} -> {to}")
+        attr = _TRANSITIONS[key]
+        dt = getattr(times, attr) if attr else 0.0
+        self.state = to
+        self.ready_at = now + dt
+        if to == State.CONTAINER_WARM:
+            self.chips_active = self.flavor.chips
+        return self.ready_at
+
+    def is_serving(self, now: float) -> bool:
+        return self.state == State.CONTAINER_WARM and now >= self.ready_at
+
+    def effective_chips(self) -> int:
+        return self.chips_active or self.flavor.chips
+
+
+class ReplicaSet:
+    """The fleet view the provisioner and the load balancer share."""
+
+    def __init__(self) -> None:
+        self.replicas: Dict[int, Replica] = {}
+
+    def add(self, r: Replica) -> Replica:
+        self.replicas[r.id] = r
+        return r
+
+    def remove(self, rid: int) -> Optional[Replica]:
+        return self.replicas.pop(rid, None)
+
+    def serving(self, now: float) -> List[Replica]:
+        return [r for r in self.replicas.values() if r.is_serving(now)]
+
+    def in_state(self, state: State) -> List[Replica]:
+        return [r for r in self.replicas.values() if r.state == state]
+
+    def expiring_by(self, t: float) -> List[Replica]:
+        return [r for r in self.replicas.values() if r.lease_expiry <= t]
+
+    def __len__(self) -> int:
+        return len(self.replicas)

@@ -1,0 +1,280 @@
+"""Execution-time distribution estimation (paper §IV-B).
+
+Profiles a prediction service's latency samples per resource flavor, fits a
+family of parametric distributions by MLE, ranks them with the one-sample
+Kolmogorov–Smirnov statistic  D_n = sup_x |F0(x) − F_data(x)|  (Eq. 1), and
+exposes the p95 of the best fit — the quantity Algorithm 1 provisions with.
+
+No scipy at runtime: erf / digamma / regularized incomplete gamma are
+implemented directly (Abramowitz–Stegun 7.1.26, NR §6.2 series/continued
+fraction); all fitters are closed-form or Newton iterations on numpy arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# special functions
+# ---------------------------------------------------------------------------
+
+def erf(x: np.ndarray) -> np.ndarray:
+    """Abramowitz–Stegun 7.1.26, |eps| <= 1.5e-7."""
+    x = np.asarray(x, np.float64)
+    sign = np.sign(x)
+    ax = np.abs(x)
+    t = 1.0 / (1.0 + 0.3275911 * ax)
+    poly = t * (0.254829592 + t * (-0.284496736 + t * (
+        1.421413741 + t * (-1.453152027 + t * 1.061405429))))
+    return sign * (1.0 - poly * np.exp(-ax * ax))
+
+
+def norm_cdf(x, mu, sigma):
+    return 0.5 * (1.0 + erf((x - mu) / (sigma * math.sqrt(2.0))))
+
+
+def digamma(x: float) -> float:
+    """Recurrence to x>=6 then asymptotic series."""
+    r = 0.0
+    while x < 6.0:
+        r -= 1.0 / x
+        x += 1.0
+    f = 1.0 / (x * x)
+    return r + math.log(x) - 0.5 / x - f * (
+        1 / 12. - f * (1 / 120. - f * (1 / 252. - f * (1 / 240. - f / 132.))))
+
+
+def _gammln(a: float) -> float:
+    return math.lgamma(a)
+
+
+def gammainc_p(a: float, x: np.ndarray) -> np.ndarray:
+    """Regularized lower incomplete gamma P(a, x) (NR gammp), vectorized."""
+    x = np.asarray(x, np.float64)
+    out = np.zeros_like(x)
+
+    def series(xv):
+        ap, summ, delt = a, 1.0 / a, 1.0 / a
+        for _ in range(200):
+            ap += 1.0
+            delt *= xv / ap
+            summ += delt
+            if abs(delt) < abs(summ) * 1e-12:
+                break
+        return summ * math.exp(-xv + a * math.log(xv) - _gammln(a))
+
+    def contfrac(xv):
+        tiny = 1e-300
+        b = xv + 1.0 - a
+        c = 1.0 / tiny
+        d = 1.0 / b
+        h = d
+        for i in range(1, 200):
+            an = -i * (i - a)
+            b += 2.0
+            d = an * d + b
+            d = tiny if abs(d) < tiny else d
+            c = b + an / c
+            c = tiny if abs(c) < tiny else c
+            d = 1.0 / d
+            de = d * c
+            h *= de
+            if abs(de - 1.0) < 1e-12:
+                break
+        return 1.0 - math.exp(-xv + a * math.log(xv) - _gammln(a)) * h
+
+    flat = x.ravel()
+    res = np.empty_like(flat)
+    for i, xv in enumerate(flat):
+        if xv <= 0:
+            res[i] = 0.0
+        elif xv < a + 1.0:
+            res[i] = series(xv)
+        else:
+            res[i] = contfrac(xv)
+    return res.reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# distribution fits (MLE)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FittedDist:
+    name: str
+    params: Dict[str, float]
+    ks_stat: float = float("nan")
+
+    def cdf(self, x: np.ndarray) -> np.ndarray:
+        p = self.params
+        x = np.asarray(x, np.float64)
+        if self.name == "normal":
+            return norm_cdf(x, p["mu"], p["sigma"])
+        if self.name == "lognormal":
+            z = np.where(x > 0, np.log(np.maximum(x, 1e-300)), -np.inf)
+            return np.where(x > 0, norm_cdf(z, p["mu"], p["sigma"]), 0.0)
+        if self.name == "gamma":
+            return gammainc_p(p["k"], np.maximum(x, 0) / p["theta"])
+        if self.name == "weibull":
+            xx = np.maximum(x, 0) / p["lam"]
+            return 1.0 - np.exp(-np.power(xx, p["k"]))
+        if self.name == "gumbel":
+            z = (x - p["mu"]) / p["beta"]
+            return np.exp(-np.exp(-z))
+        raise ValueError(self.name)
+
+    def ppf(self, q: float, lo: float = 0.0, hi: Optional[float] = None
+            ) -> float:
+        """Quantile by bisection (monotone CDF)."""
+        p = self.params
+        if hi is None:
+            hi = {"normal": p.get("mu", 1) + 20 * p.get("sigma", 1),
+                  "gumbel": p.get("mu", 1) + 40 * p.get("beta", 1)}.get(
+                      self.name, 0.0)
+            if not hi:
+                m = p.get("mu", 0)
+                hi = 1e6 if self.name == "lognormal" else (
+                    40 * p.get("k", 1) * p.get("theta", 1)
+                    if self.name == "gamma" else 40 * p.get("lam", 1.0))
+            lo = min(lo, p.get("mu", 0) - 20 * p.get("sigma", 0)
+                     ) if self.name in ("normal", "gumbel") else lo
+        for _ in range(200):
+            mid = 0.5 * (lo + hi)
+            if float(self.cdf(np.array([mid]))[0]) < q:
+                lo = mid
+            else:
+                hi = mid
+            if hi - lo < 1e-9 * max(1.0, abs(hi)):
+                break
+        return 0.5 * (lo + hi)
+
+
+def _fit_normal(x):
+    return {"mu": float(np.mean(x)), "sigma": float(max(np.std(x), 1e-12))}
+
+
+def _fit_lognormal(x):
+    lx = np.log(np.maximum(x, 1e-300))
+    return {"mu": float(np.mean(lx)), "sigma": float(max(np.std(lx), 1e-12))}
+
+
+def _fit_gamma(x):
+    m = float(np.mean(x))
+    s = float(np.mean(np.log(np.maximum(x, 1e-300))))
+    target = math.log(m) - s                        # > 0
+    k = (3 - target + math.sqrt((target - 3) ** 2 + 24 * target)) / (12 * target)
+    for _ in range(50):                             # Newton on log k
+        g = math.log(k) - digamma(k) - target
+        if abs(g) < 1e-12:
+            break
+        # d/dk [log k - psi(k)] = 1/k - psi'(k); approx psi' by series
+        h = 1e-6 * k
+        gp = ((math.log(k + h) - digamma(k + h)) - (math.log(k - h)
+                                                    - digamma(k - h))) / (2 * h)
+        k = max(k - g / gp, 1e-6)
+    return {"k": float(k), "theta": float(m / k)}
+
+
+def _fit_weibull(x):
+    lx = np.log(np.maximum(x, 1e-300))
+    k = 1.2 / max(float(np.std(lx)), 1e-9)          # moment-matched start
+    for _ in range(100):
+        xk = np.power(x, k)
+        a = float(np.sum(xk * lx) / np.sum(xk))
+        g = a - 1.0 / k - float(np.mean(lx))
+        xk_l2 = float(np.sum(xk * lx * lx) / np.sum(xk))
+        gp = xk_l2 - a * a + 1.0 / (k * k)
+        step = g / max(gp, 1e-12)
+        k = max(k - step, 1e-3)
+        if abs(step) < 1e-10 * k:
+            break
+    lam = float(np.power(np.mean(np.power(x, k)), 1.0 / k))
+    return {"k": float(k), "lam": lam}
+
+
+def _fit_gumbel(x):
+    beta = float(np.std(x) * math.sqrt(6) / math.pi)
+    m = float(np.mean(x))
+    for _ in range(100):                             # fixed point MLE
+        w = np.exp(-x / beta)
+        beta_new = m - float(np.sum(x * w) / np.sum(w))
+        if abs(beta_new - beta) < 1e-12:
+            break
+        beta = max(beta_new, 1e-12)
+    mu = -beta * math.log(float(np.mean(np.exp(-x / beta))))
+    return {"mu": mu, "beta": beta}
+
+
+_FITTERS = {
+    "normal": _fit_normal,
+    "lognormal": _fit_lognormal,
+    "gamma": _fit_gamma,
+    "weibull": _fit_weibull,
+    "gumbel": _fit_gumbel,
+}
+
+
+def ks_statistic(dist: FittedDist, x: np.ndarray) -> float:
+    """One-sample K-S statistic against the fitted CDF (Eq. 1)."""
+    xs = np.sort(np.asarray(x, np.float64))
+    n = len(xs)
+    F = dist.cdf(xs)
+    i = np.arange(1, n + 1)
+    return float(np.max(np.maximum(i / n - F, F - (i - 1) / n)))
+
+
+def fit_best_distribution(samples: np.ndarray,
+                          candidates: Optional[List[str]] = None
+                          ) -> Tuple[FittedDist, List[FittedDist]]:
+    """MLE-fit every candidate and rank by K-S statistic (paper Fig. 6)."""
+    x = np.asarray(samples, np.float64)
+    assert np.all(x > 0), "latency samples must be positive"
+    fits: List[FittedDist] = []
+    for name in (candidates or list(_FITTERS)):
+        try:
+            d = FittedDist(name, _FITTERS[name](x))
+            d.ks_stat = ks_statistic(d, x)
+            if math.isfinite(d.ks_stat):
+                fits.append(d)
+        except (ValueError, OverflowError, ZeroDivisionError):
+            continue
+    fits.sort(key=lambda d: d.ks_stat)
+    return fits[0], fits
+
+
+@dataclasses.dataclass
+class LatencyProfile:
+    """Profiled execution-time model of one service on one flavor."""
+    dist: FittedDist
+    p95: float
+    mean: float
+    n_samples: int
+
+    @classmethod
+    def from_samples(cls, samples: np.ndarray) -> "LatencyProfile":
+        best, _ = fit_best_distribution(samples)
+        return cls(dist=best, p95=best.ppf(0.95),
+                   mean=float(np.mean(samples)), n_samples=len(samples))
+
+
+class ServiceProfiler:
+    """Paper's Prediction Service Profiler: profiles each (service, flavor)
+    pair from a latency sampler and caches the per-flavor p95 estimates."""
+
+    def __init__(self):
+        self._profiles: Dict[Tuple[str, str], LatencyProfile] = {}
+
+    def profile(self, service: str, flavor: str, samples: np.ndarray
+                ) -> LatencyProfile:
+        prof = LatencyProfile.from_samples(samples)
+        self._profiles[(service, flavor)] = prof
+        return prof
+
+    def get(self, service: str, flavor: str) -> LatencyProfile:
+        return self._profiles[(service, flavor)]
+
+    def p95(self, service: str, flavor: str) -> float:
+        return self._profiles[(service, flavor)].p95

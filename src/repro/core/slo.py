@@ -1,0 +1,71 @@
+"""SLO specification + prediction-latency monitor (paper §IV-A items 2/4).
+
+The SLO is a bound ``latency_bound`` on the x-percentile response time of
+the backend to a prediction query (paper: 95th percentile, 1.5-2 s).  The
+LatencyMonitor logs violations over fixed windows (paper: every 5 seconds)
+and is the signal source for the reactive vertical scaler.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOSpec:
+    latency_bound: float            # lambda, seconds
+    percentile: float = 95.0        # which latency percentile is bounded
+
+    def met(self, latencies: np.ndarray) -> bool:
+        if len(latencies) == 0:
+            return True
+        return float(np.percentile(latencies, self.percentile)) \
+            <= self.latency_bound
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceSpec:
+    """A registered prediction service: the deployer supplies the model id,
+    its memory floor and the SLO (paper §IV: 'Barista allows service
+    providers to communicate the performance constraints')."""
+    name: str
+    arch: str                      # assigned-architecture id
+    slo: SLOSpec
+    min_mem_gib: float             # weights + KV working set
+    request_seq: int = 1024        # tokens per prediction request
+    decode_tokens: int = 0         # 0 = single forward (paper-style request)
+
+
+class LatencyMonitor:
+    """Sliding-window latency log with per-window SLO verdicts."""
+
+    def __init__(self, slo: SLOSpec, window: float = 5.0):
+        self.slo = slo
+        self.window = window
+        self._events: List[Tuple[float, float]] = []   # (finish_t, latency)
+        self.windows: List[Tuple[float, float, bool]] = []  # (t, p95, ok)
+
+    def record(self, finish_t: float, latency: float) -> None:
+        self._events.append((finish_t, latency))
+
+    def roll(self, now: float) -> Optional[Tuple[float, bool]]:
+        """Close the window ending at ``now``; returns (p95, ok) or None if
+        no traffic landed in the window."""
+        lo = now - self.window
+        lat = np.asarray([l for t, l in self._events if lo < t <= now])
+        if len(lat) == 0:
+            return None
+        p = float(np.percentile(lat, self.slo.percentile))
+        ok = p <= self.slo.latency_bound
+        self.windows.append((now, p, ok))
+        # drop events older than one window (bounded memory)
+        self._events = [(t, l) for t, l in self._events if t > lo]
+        return p, ok
+
+    def compliance(self) -> float:
+        """Fraction of non-empty windows that met the SLO."""
+        if not self.windows:
+            return 1.0
+        return float(np.mean([ok for _, _, ok in self.windows]))

@@ -1,0 +1,94 @@
+"""Reactive vertical scaler — the paper's §IV-E model-correction loop.
+
+Monitors the per-replica SLO every ``check_every`` seconds (paper: 5 s):
+  * on an SLO miss: immediately DOUBLE the chips assigned to the serving
+    container (bounded by the slice size),
+  * when the observed latency clears the bound with margin: de-allocate
+    ONE chip at a time, handing the freed chips to co-located low-priority
+    batch jobs (which cost the serving container the paper's 20% worst-case
+    interference).
+
+The paper de/allocates CPU cores; on TPU the unit is a chip within the
+replica's slice (a TP-degree change).  One-at-a-time downscaling keeps the
+paper's semantics; real slices would quantize to power-of-two TP groups —
+set ``power_of_two=True`` for that deployment mode (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.lifecycle import Replica
+from repro.core.slo import SLOSpec
+
+
+@dataclasses.dataclass
+class VerticalConfig:
+    margin: float = 0.7            # downscale when p95 < margin * bound
+    check_every: float = 5.0       # paper: latency monitored every 5 s
+    power_of_two: bool = False     # quantize TP degree (TPU deployment mode)
+
+
+def _next_pow2_down(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+@dataclasses.dataclass
+class VerticalScaler:
+    slo: SLOSpec
+    cfg: VerticalConfig = dataclasses.field(default_factory=VerticalConfig)
+    events: List[Tuple[float, int, int, int, str]] = dataclasses.field(
+        default_factory=list)      # (t, rid, chips_before, chips_after, why)
+    # per-replica (flavor_chips, [(t, active_chips), ...]) timeline — kept
+    # here so savings survive replica termination
+    timelines: Dict[int, Tuple[int, List[Tuple[float, int]]]] = \
+        dataclasses.field(default_factory=dict)
+
+    def adjust(self, replica: Replica, observed_p95: Optional[float],
+               now: float) -> int:
+        """Apply one 5-second check; mutates ``replica.chips_active`` and
+        ``replica.colocated_batch``; returns the new chip count."""
+        before = replica.effective_chips()
+        chips = before
+        if observed_p95 is None:
+            return chips                      # no traffic in the window
+        if observed_p95 > self.slo.latency_bound:
+            # SLO miss: double immediately (within the slice)
+            chips = min(before * 2, replica.flavor.chips)
+            why = "slo_miss_double"
+        elif observed_p95 < self.cfg.margin * self.slo.latency_bound \
+                and before > 1:
+            # comfortable margin: free one chip for batch jobs
+            chips = before - 1
+            if self.cfg.power_of_two:
+                chips = _next_pow2_down(chips)
+            why = "margin_shrink"
+        else:
+            return chips
+        if chips != before:
+            replica.chips_active = chips
+            replica.colocated_batch = chips < replica.flavor.chips
+            self.events.append((now, replica.id, before, chips, why))
+            fc, steps = self.timelines.setdefault(
+                replica.id, (replica.flavor.chips, []))
+            steps.append((now, chips))
+        return chips
+
+    def chip_seconds_saved(self, horizon_s: float,
+                           replicas: Dict[int, Replica]) -> float:
+        """Integrate (flavor chips - active chips) over the per-replica
+        timelines — the paper's 'CPU shares saved' metric (Fig. 13).
+        ``horizon_s`` bounds the integration for still-live replicas."""
+        saved = 0.0
+        for rid, (flavor_chips, steps) in self.timelines.items():
+            if not steps:
+                continue
+            for (t0, chips), (t1, _) in zip(steps, steps[1:]):
+                saved += (flavor_chips - chips) * (t1 - t0)
+            t_last, chips_last = steps[-1]
+            saved += (flavor_chips - chips_last) * max(
+                0.0, horizon_s - t_last)
+        return saved

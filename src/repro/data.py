@@ -1,0 +1,69 @@
+"""Synthetic batch construction shared by smoke tests, examples and dry-run
+input specs.  Training data is a deterministic synthetic token stream (mixture
+of zipf-ish unigram draws + copy motifs) so loss curves are reproducible."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def synthetic_batch(cfg: ModelConfig, batch: int, seq: int,
+                    seed: int = 0) -> Dict[str, jax.Array]:
+    """Concrete batch for CPU smoke tests / training examples."""
+    rng = np.random.default_rng(seed)
+    V = cfg.vocab
+    if cfg.embed_inputs:  # hubert: frames + mask + cluster targets
+        frames = rng.standard_normal((batch, seq, cfg.d_model), np.float32)
+        mask = rng.random((batch, seq)) < 0.08
+        targets = rng.integers(0, V, (batch, seq))
+        return {"frames": jnp.asarray(frames, jnp.bfloat16),
+                "mask": jnp.asarray(mask),
+                "targets": jnp.asarray(targets, jnp.int32)}
+    # zipf-ish tokens with repeated motifs (so the LM has something to learn)
+    ranks = np.arange(1, V + 1)
+    p = 1.0 / ranks
+    p /= p.sum()
+    toks = rng.choice(V, size=(batch, seq + 1), p=p)
+    motif = rng.integers(0, V, size=16)
+    for b in range(batch):
+        for s in range(0, seq - 32, 64):
+            toks[b, s:s + 16] = motif
+    out = {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+           "targets": jnp.asarray(toks[:, 1:], jnp.int32)}
+    if cfg.family == "vlm":
+        patches = rng.standard_normal((batch, cfg.n_patches, cfg.d_model),
+                                      np.float32)
+        out["patches"] = jnp.asarray(patches, jnp.bfloat16)
+    return out
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig):
+    """ShapeDtypeStructs for the dry-run (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.embed_inputs:
+        return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16),
+                "mask": jax.ShapeDtypeStruct((B, S), jnp.bool_),
+                "targets": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+           "targets": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        out["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def batch_axes_tree(cfg: ModelConfig):
+    """Logical axes for each batch field (for input shardings)."""
+    if cfg.embed_inputs:
+        return {"frames": ("batch", "seq", "embed"),
+                "mask": ("batch", "seq"),
+                "targets": ("batch", "seq")}
+    out = {"tokens": ("batch", "seq"), "targets": ("batch", "seq")}
+    if cfg.family == "vlm":
+        out["patches"] = ("batch", None, "embed")
+    return out

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the serving hot spots (+ jnp oracles).
+
+  flash_attention   prefill attention (online softmax, GQA via index_map)
+  decode_attention  KV-bandwidth-bound decode partials (flash-decoding)
+  ssd_scan          Mamba2 chunked state-space dual scan
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), wrapped in ops.py,
+oracled in ref.py, validated in interpret mode by tests/test_kernels.py.
+"""
+from repro.kernels.ops import (decode_attention, decode_attention_partial,
+                               decode_attention_ref, flash_attention,
+                               flash_attention_bshd, flash_attention_ref,
+                               ssd_scan, ssd_scan_ref)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,126 @@
+"""Pallas TPU decode-attention kernel (flash-decoding partials).
+
+One new-token query per sequence attends to its KV-cache shard and emits
+PARTIAL softmax state (o, m, l) — the caller merges partials across
+sequence shards with the stable logsumexp combine (exactly what
+repro.models.layers.flash_decode_sharded psums across the mesh).  Keeping
+the kernel partial-valued means the same kernel serves single-shard and
+seq-sharded caches.
+
+Tiling: decode is KV-bandwidth-bound — the kernel's job is to stream the
+cache through VMEM exactly once at full HBM bandwidth.
+  grid = (B, Hkv, S/bs): KV-block axis innermost/arbitrary; the g = H/Hkv
+  grouped query heads ride along as rows of an [g, hd] tile so a GQA group
+  shares each streamed KV block (g x bandwidth reuse); per-(batch, kv-head)
+  scratch holds the [g, hd] accumulator + [g,1] running max/denominator.
+  Validity (which cache slots hold live tokens — decode position, ring
+  wrap) arrives as a per-slot bool so ragged/ring caches need no special
+  kernel paths.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref,
+                   o_ref, m_ref, l_ref,
+                   acc_ref, mm_ref, ll_ref, *, scale: float, bs: int):
+    j = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        mm_ref[...] = jnp.full_like(mm_ref, NEG_INF)
+        ll_ref[...] = jnp.zeros_like(ll_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # [g, hd]
+    k = k_ref[0, 0].astype(jnp.float32)              # [bs, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+    ok = valid_ref[0]                                # [bs] bool
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(ok[None, :], s, NEG_INF)           # [g, bs]
+
+    m_prev = mm_ref[...]                             # [g, 1]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    ll_ref[...] = ll_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    mm_ref[...] = m_new
+
+    @pl.when(j == ns - 1)
+    def _out():
+        o_ref[0, 0] = acc_ref[...]
+        m_ref[0, 0] = mm_ref[...][:, 0]
+        l_ref[0, 0] = ll_ref[...][:, 0]
+
+
+def _divisor(n: int, want: int) -> int:
+    want = min(want, n)
+    for b in range(want, 0, -1):
+        if n % b == 0:
+            return b
+    return n
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kv_block", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     valid: jax.Array, *, kv_block: int = 512,
+                     interpret: bool = True
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """q: [B,H,hd]  k,v: [B,Hkv,S,hd]  valid: [B,S] bool.
+
+    Returns fp32 partials (o [B,H,hd], m [B,H], l [B,H]) for the cross-
+    shard logsumexp merge."""
+    B, H, hd = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    assert H % Hkv == 0
+    g = H // Hkv
+    bs = _divisor(S, kv_block)
+    qg = q.reshape(B, Hkv, g, hd)
+    grid = (B, Hkv, S // bs)
+
+    kernel = functools.partial(_decode_kernel, scale=hd ** -0.5, bs=bs)
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, bs), lambda b, h, j: (b, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, g), lambda b, h, j: (b, h, 0)),
+            pl.BlockSpec((1, 1, g), lambda b, h, j: (b, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, g, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, g), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, g), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, hd), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="decode_attention",
+    )(qg, k, v, valid)
+    return o.reshape(B, H, hd), m.reshape(B, H), l.reshape(B, H)

@@ -1,0 +1,77 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These adapt model-layout tensors ([B, S, H, hd] activations, [B, Hkv, S, hd]
+caches) to the kernels' tiled layouts, pick hardware-aligned block sizes,
+and fall back to the pure-jnp reference path when a shape cannot tile
+(e.g. head_dim not a multiple of the VPU lane width at real-TPU lowering).
+
+``interpret`` defaults to True because this container is CPU-only; a TPU
+deployment flips the default via KERNEL_INTERPRET=0.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as ref_lib
+from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
+
+INTERPRET = os.environ.get("KERNEL_INTERPRET", "1") != "0"
+
+
+def flash_attention_bshd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool = True, window: int = 0,
+                         q_block: int = 128, kv_block: int = 256
+                         ) -> jax.Array:
+    """Model layout: q [B,Sq,H,hd], k/v [B,Sk,Hkv,hd] -> [B,Sq,H,hd]."""
+    qh = q.swapaxes(1, 2)
+    kh = k.swapaxes(1, 2)
+    vh = v.swapaxes(1, 2)
+    out = _flash_pallas(qh, kh, vh, causal=causal, window=window,
+                        q_block=q_block, kv_block=kv_block,
+                        interpret=INTERPRET)
+    return out.swapaxes(1, 2)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    q_block: int = 128, kv_block: int = 256) -> jax.Array:
+    """Kernel layout [B,H,S,hd] passthrough."""
+    return _flash_pallas(q, k, v, causal=causal, window=window,
+                         q_block=q_block, kv_block=kv_block,
+                         interpret=INTERPRET)
+
+
+def decode_attention_partial(q: jax.Array, k_cache: jax.Array,
+                             v_cache: jax.Array, valid: jax.Array
+                             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """q [B,H,hd], cache [B,Hkv,S,hd], valid [B,S] -> fp32 (o, m, l)."""
+    return _decode_pallas(q, k_cache, v_cache, valid, interpret=INTERPRET)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     valid: jax.Array) -> jax.Array:
+    """Single-shard convenience: normalize the partials to the final
+    attention output [B,H,hd]."""
+    o, m, l = decode_attention_partial(q, k_cache, v_cache, valid)
+    return (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+def ssd_scan(xh: jax.Array, dt: jax.Array, a: jax.Array, B_: jax.Array,
+             C_: jax.Array, D: jax.Array,
+             h0: Optional[jax.Array] = None, chunk: int = 128
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked Mamba2 SSD scan; see kernels.ssd_scan for layout docs."""
+    return _ssd_pallas(xh, dt, a, B_, C_, D, h0, chunk=chunk,
+                       interpret=INTERPRET)
+
+
+# re-export oracles so tests/benchmarks import one module
+flash_attention_ref = ref_lib.flash_attention_ref
+decode_attention_ref = ref_lib.decode_attention_ref
+ssd_scan_ref = ref_lib.ssd_scan_ref

@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the numerical ground truth its kernel is tested against
+(tests/test_kernels.py sweeps shapes/dtypes and asserts allclose).  They are
+deliberately naive — O(S^2) attention materializes the score matrix — so
+correctness is obvious by inspection.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _expand_kv(k: jnp.ndarray, g: int) -> jnp.ndarray:
+    return jnp.repeat(k, g, axis=1) if g > 1 else k
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """q: [B,H,Sq,hd]  k,v: [B,Hkv,Sk,hd] -> [B,H,Sq,hd].
+
+    GQA: query head h reads kv head h // (H // Hkv).  ``window`` > 0 adds a
+    sliding-window constraint (key position > query position - window)."""
+    B, H, Sq, hd = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    g = H // Hkv
+    k, v = _expand_kv(k, g), _expand_kv(v, g)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (hd ** -0.5)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        # align the last query with the last key (supports Sq < Sk suffix)
+        mask &= k_pos <= q_pos + (Sk - Sq)
+    if window:
+        mask &= k_pos > q_pos + (Sk - Sq) - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         valid: jnp.ndarray
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Partial-softmax decode attention over one KV shard.
+
+    q: [B,H,hd]  k,v: [B,Hkv,S,hd]  valid: [B,S] bool (which cache slots
+    participate).  Returns fp32 partials (o [B,H,hd], m [B,H], l [B,H]) —
+    combinable across shards with the stable logsumexp merge."""
+    B, H, hd = q.shape
+    Hkv = k.shape[1]
+    g = H // Hkv
+    qg = q.reshape(B, Hkv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg, k.astype(jnp.float32)) * hd ** -0.5
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = s.max(-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32))
+    return (o.reshape(B, H, hd), m.reshape(B, H), l.reshape(B, H))
+
+
+def ssd_scan_ref(xh: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                 B_: jnp.ndarray, C_: jnp.ndarray, D: jnp.ndarray,
+                 h0: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential (non-chunked) SSD recurrence — the slowest, most obviously
+    correct form of Mamba2's state-space scan.
+
+    xh: [B,L,H,P]  dt: [B,L,H] (post-softplus)  a: [H] (negative)
+    B_,C_: [B,L,N]  D: [H]  h0: [B,H,P,N] fp32 or None.
+    Returns (y [B,L,H,P], h_final [B,H,P,N])."""
+    Bb, L, H, Pp = xh.shape
+    N = B_.shape[-1]
+    f32 = jnp.float32
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, Pp, N), f32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp                       # [B,H,P],[B,H],[B,N]
+        da = jnp.exp(dt_t.astype(f32) * a.astype(f32))  # [B,H]
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt_t.astype(f32),
+                         x_t.astype(f32), b_t.astype(f32))
+        h = h * da[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, c_t.astype(f32))
+        return h, y
+
+    hT, ys = jax.lax.scan(
+        step, h0.astype(f32),
+        (xh.swapaxes(0, 1), dt.swapaxes(0, 1),
+         B_.swapaxes(0, 1), C_.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1) + D.astype(f32)[None, None, :, None] \
+        * xh.astype(f32)
+    return y.astype(xh.dtype), hT

@@ -1,0 +1,137 @@
+"""Pallas TPU chunked-SSD kernel (Mamba2 state-space duality).
+
+The SSD insight: within a chunk of length c the recurrence is a dense
+[c, c] masked matmul (MXU work); only the O(H*P*N) state crosses chunk
+boundaries.  The kernel maps that directly onto the TPU memory hierarchy:
+
+  grid = (B, L/c) with the chunk axis innermost and ``arbitrary``: the
+  running state h [H, P, N] lives in fp32 VMEM scratch across chunk
+  iterations (never round-trips HBM), while each chunk's x/dt/B/C tiles
+  stream through VMEM and its intra-chunk decay/score matrices
+  ([H, c, c]) are built and consumed in registers/VMEM.  Chunk c = 128
+  keeps both [c, c] matmuls MXU-shaped and the VMEM working set ~2-4 MiB
+  at model scale (H=32, P=64, N=128).
+
+Out: y [B, L, H, P] and the final state [B, H, P, N] (the decode handoff).
+Validated against ref.ssd_scan_ref (pure sequential recurrence) AND
+repro.models.ssm.ssd_chunked (the production jnp path) in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(xh_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref,
+                y_ref, hT_ref, h_ref, *, chunk: int):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    xh = xh_ref[0].astype(jnp.float32)        # [c, H, P]
+    dt = dt_ref[0].astype(jnp.float32)        # [c, H]
+    a = a_ref[...].astype(jnp.float32)        # [H]
+    B_ = b_ref[0].astype(jnp.float32)         # [c, N]
+    C_ = c_ref[0].astype(jnp.float32)         # [c, N]
+    D = d_ref[...].astype(jnp.float32)        # [H]
+
+    da = dt * a[None, :]                      # [c, H]
+    cum = jnp.cumsum(da, axis=0)              # [c, H]
+    total = cum[-1]                           # [H]
+
+    # intra-chunk: decay[h, i, j] = exp(cum[i,h] - cum[j,h]) for i >= j
+    ci_m = cum.T[:, :, None]                  # [H, c, 1]
+    cj_m = cum.T[:, None, :]                  # [H, 1, c]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(tri[None], jnp.exp(ci_m - cj_m), 0.0)   # [H, c, c]
+
+    G = jax.lax.dot_general(C_, B_, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [c, c]
+    M = G[None] * decay                                          # [H, c, c]
+    # Y_intra[i,h,p] = sum_j M[h,i,j] * dt[j,h] * xh[j,h,p]
+    dx = dt[:, :, None] * xh                                     # [c, H, P]
+    y = jnp.einsum("hij,jhp->ihp", M, dx,
+                   preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of the carried state
+    # Y_inter[i,h,p] = exp(cum[i,h]) * sum_n C_[i,n] h[h,p,n]
+    h_prev = h_ref[...]                                          # [H, P, N]
+    ch = jnp.einsum("in,hpn->ihp", C_, h_prev,
+                    preferred_element_type=jnp.float32)
+    y = y + jnp.exp(cum)[:, :, None] * ch
+    y = y + D[None, :, None] * xh
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update: h' = h * exp(total) + sum_j dt[j] decay_to_end[j] B_j x_j
+    decay_end = jnp.exp(total[None, :] - cum)                    # [c, H]
+    w = dt * decay_end                                           # [c, H]
+    upd = jnp.einsum("jh,jn,jhp->hpn", w, B_, xh,
+                     preferred_element_type=jnp.float32)
+    h_ref[...] = h_prev * jnp.exp(total)[:, None, None] + upd
+
+    @pl.when(ci == nc - 1)
+    def _out():
+        hT_ref[0] = h_ref[...]
+
+
+def _divisor(n: int, want: int) -> int:
+    want = min(want, n)
+    for b in range(want, 0, -1):
+        if n % b == 0:
+            return b
+    return n
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(xh: jax.Array, dt: jax.Array, a: jax.Array, B_: jax.Array,
+             C_: jax.Array, D: jax.Array,
+             h0: Optional[jax.Array] = None, *, chunk: int = 128,
+             interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """xh: [B,L,H,P]  dt: [B,L,H] (post-softplus)  a: [H] (negative)
+    B_,C_: [B,L,N]  D: [H]  h0: [B,H,P,N] fp32 (zeros if None).
+    Returns (y [B,L,H,P], h_final [B,H,P,N] fp32).  L % chunk must be 0
+    after the divisor snap (pad upstream; dt=0 rows are state-neutral)."""
+    Bb, L, H, P = xh.shape
+    N = B_.shape[-1]
+    c = _divisor(L, chunk)
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    grid = (Bb, L // c)
+
+    kernel = functools.partial(_ssd_kernel, chunk=c)
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c, H, P), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, c, H), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((H,), lambda b, i: (0,)),
+            pl.BlockSpec((1, c, N), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, c, N), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((H,), lambda b, i: (0,)),
+            pl.BlockSpec((1, H, P, N), lambda b, i: (b, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, H, P), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, H, P, N), lambda b, i: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, L, H, P), xh.dtype),
+            jax.ShapeDtypeStruct((Bb, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((H, P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+        name="ssd_scan",
+    )(xh, dt, a, B_, C_, D, h0)
+    return y, hT

@@ -1,0 +1,37 @@
+"""Mesh-driven config adaptation: GQA head padding for TP divisibility.
+
+When ``n_heads % tp != 0`` the logical-axis fallback would replicate the
+attention weights (16x redundant attention compute).  Instead we pad KV heads
+up to the TP degree and Q heads by the same group factor — zero-initialized
+extra heads whose ``wo`` rows are zero contribute exactly nothing, so the
+function computed is unchanged while attention shards evenly.
+(phi3: 40H/10KV -> 64H/16KV;  smollm: 9H/3KV -> 48H/16KV.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.configs.base import ModelConfig
+
+
+def pad_heads_for_tp(cfg: ModelConfig, tp: int,
+                     max_overhead: float = 2.0) -> ModelConfig:
+    if cfg.n_heads == 0 or tp <= 1 or cfg.n_heads % tp == 0:
+        return cfg
+    g = cfg.n_heads // cfg.n_kv_heads
+    kv = ((cfg.n_kv_heads + tp - 1) // tp) * tp
+    if (g * kv) / cfg.n_heads > max_overhead:
+        # padding would waste more FLOPs than it shards (smollm: 9 -> 48
+        # heads is 5.3x); leave heads alone — the model falls back to
+        # sequence-parallel attention, which splits exactly (SPerf
+        # hillclimb 3)
+        return cfg
+    return dataclasses.replace(
+        cfg, n_heads=g * kv, n_kv_heads=kv,
+        head_dim_override=cfg.head_dim)
+
+
+def adapt_config(cfg: ModelConfig, mesh) -> ModelConfig:
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    return pad_heads_for_tp(cfg, tp)

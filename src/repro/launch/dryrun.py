@@ -1,0 +1,371 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede any jax import: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes and extract roofline terms.
+
+  single pod : 16 x 16           (data, model)        = 256 chips
+  multi pod  : 2 x 16 x 16       (pod, data, model)   = 512 chips
+
+Per runnable cell this script:
+  1. builds ShapeDtypeStruct inputs with their production shardings
+     (``input_specs``), lowers and compiles the real scanned program;
+     ``memory_analysis()`` proves the per-device footprint fits a 16 GiB v5e
+     chip and the compile itself proves the sharding is coherent;
+  2. compiles 1-layer and 2-layer *unrolled* probe variants and differences
+     their ``cost_analysis()`` + HLO-parsed collective bytes into exact
+     per-layer costs, extrapolated to the full depth (XLA cost analysis
+     counts while bodies once — see repro.roofline.analysis);
+  3. writes the roofline record to results/dryrun.json (incremental).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single          # table
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi           # proof
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro import data as data_lib
+from repro.configs import (ARCH_IDS, SHAPES, cell_is_runnable, get_config,
+                           get_shape)
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.adapt import adapt_config
+from repro.launch.mesh import make_production_mesh
+from repro.models import decode as decode_lib
+from repro.models import flags
+from repro.models import model as model_lib
+from repro.models.sharding import (COMPUTE_RULES, SERVE_DECODE_RULES,
+                                   SERVE_STORE_RULES, logical_to_pspec)
+from repro.roofline import analysis as roofline
+from repro.train.optimizer import OptState
+from repro.train.train_step import (TrainSettings, make_train_step,
+                                    storage_rules)
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results", "dryrun.json")
+PROBE_UNROLL = 64
+
+# Gradient-accumulation microbatches per arch (train_4k cells): the smallest
+# count whose compiled peak fits 16 GiB/chip (measured; see EXPERIMENTS.md
+# §Dry-run).  Unlisted archs run the full global batch in one microbatch.
+TRAIN_MICROBATCH = {
+    "mixtral-8x22b": 4,     # 141B MoE: fp32 state+grad-acc ~8.8 GiB/chip
+    "zamba2-2.7b": 4,       # mamba2 activations (no seq-parallel residual)
+}
+
+
+def train_settings_for(arch: str) -> "TrainSettings":
+    return TrainSettings(microbatches=TRAIN_MICROBATCH.get(arch, 1))
+
+
+def _is_axes_leaf(x):
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str)
+                                        for a in x)
+
+
+def sharded_structs(struct_tree, axes_tree, mesh, rules):
+    """Attach NamedShardings to ShapeDtypeStructs via logical-axis rules."""
+    def one(s, ax):
+        spec = logical_to_pspec(s.shape, ax, mesh, rules)
+        return jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(one, struct_tree, axes_tree)
+
+
+def reduce_layers(cfg: ModelConfig, units: int) -> ModelConfig:
+    if cfg.family == "hybrid":
+        return dataclasses.replace(
+            cfg, n_layers=units * cfg.hybrid_attn_every)
+    return dataclasses.replace(cfg, n_layers=units)
+
+
+def layer_units(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.hybrid_attn_every
+    return cfg.n_layers
+
+
+def _mp(mesh) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+
+def _all_axes_prod(mesh) -> int:
+    n = 1
+    for s in mesh.devices.shape:
+        n *= s
+    return n
+
+
+def _serve_xform(mesh, layer_axes):
+    """Per-layer constraint to compute rules (serve-side FSDP gather)."""
+    def xform(layer_p):
+        def one(p, ax):
+            spec = logical_to_pspec(p.shape, ax, mesh, COMPUTE_RULES)
+            return jax.lax.with_sharding_constraint(
+                p, NamedSharding(mesh, spec))
+        return jax.tree.map(one, layer_p, layer_axes)
+    return xform
+
+
+def _drop_one_lead(axes_tree):
+    def one(ax):
+        return tuple(ax[1:]) if (ax and ax[0] == "layers") else tuple(ax)
+    return jax.tree.map(one, axes_tree, is_leaf=_is_axes_leaf)
+
+
+# --------------------------------------------------------------------------
+# input_specs + lowering per step kind
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                kind: Optional[str] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins (weak-type-correct, shardable, zero
+    allocation) for every model input of this cell."""
+    kind = kind or shape.kind
+    rules = storage_rules(TrainSettings()) if kind == "train" else (
+        SERVE_STORE_RULES if kind == "prefill" else SERVE_DECODE_RULES)
+    bstruct = data_lib.batch_struct(cfg, shape)
+    baxes = data_lib.batch_axes_tree(cfg)
+    if kind == "prefill":
+        for k in ("targets", "mask"):
+            bstruct.pop(k, None)
+            baxes.pop(k, None)
+    batch = sharded_structs(bstruct, baxes, mesh, rules)
+    if kind == "decode":
+        tok = jax.ShapeDtypeStruct(
+            (shape.global_batch, 1), jnp.int32,
+            sharding=NamedSharding(mesh, logical_to_pspec(
+                (shape.global_batch, 1), ("batch", "seq"), mesh, rules)))
+        cstruct = decode_lib.abstract_cache(cfg, shape.global_batch,
+                                            shape.seq_len)
+        caxes = decode_lib.cache_axes(cfg, shape.global_batch, shape.seq_len)
+        cache = sharded_structs(cstruct, caxes, mesh, rules)
+        return {"token": tok, "cache": cache}
+    return batch
+
+
+def lower_train(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                settings: TrainSettings = TrainSettings()):
+    moe_blocks = model_lib.moe_blocks_for(cfg, _mp(mesh))
+    step, axes = make_train_step(cfg, mesh, settings, moe_blocks)
+    rules = storage_rules(settings)
+    p = sharded_structs(
+        model_lib.abstract_param_tree(cfg, moe_blocks, jnp.float32),
+        axes, mesh, rules)
+    opt = OptState(
+        mu=p, nu=jax.tree.map(lambda s: s, p),
+        step=jax.ShapeDtypeStruct((), jnp.int32))
+    batch = input_specs(cfg, shape, mesh, "train")
+    # production trainer donates params/opt (updated in place); the dry-run
+    # must model the same aliasing or peak bytes double-count the state
+    return jax.jit(step, donate_argnums=(0, 1)).lower(p, opt, None, batch)
+
+
+def lower_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    moe_blocks = model_lib.moe_blocks_for(cfg, _mp(mesh))
+    axes = model_lib.param_axes(cfg, moe_blocks)
+    p = sharded_structs(
+        model_lib.abstract_param_tree(cfg, moe_blocks, jnp.bfloat16),
+        axes, mesh, SERVE_STORE_RULES)
+    batch = input_specs(cfg, shape, mesh, "prefill")
+    xform = _serve_xform(mesh, _drop_one_lead(axes["layers"]))
+
+    def fn(params, batch):
+        return decode_lib.prefill(cfg, params, batch, mesh,
+                                  max_len=shape.seq_len, layer_xform=xform)
+
+    return jax.jit(fn).lower(p, batch)
+
+
+def lower_decode(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    moe_blocks = model_lib.moe_blocks_for(cfg, _all_axes_prod(mesh))
+    axes = model_lib.param_axes(cfg, moe_blocks)
+    p = sharded_structs(
+        model_lib.abstract_param_tree(cfg, moe_blocks, jnp.bfloat16),
+        axes, mesh, SERVE_DECODE_RULES)
+    io = input_specs(cfg, shape, mesh, "decode")
+
+    def fn(params, token, cache):
+        return decode_lib.decode_step(cfg, params, token, cache, mesh)
+
+    # serving engine donates the KV cache buffer between steps
+    return jax.jit(fn, donate_argnums=(2,)).lower(
+        p, io["token"], io["cache"])
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    if shape.kind == "train":
+        return lower_train(cfg, shape, mesh, train_settings_for(cfg.name))
+    if shape.kind == "prefill":
+        return lower_prefill(cfg, shape, mesh)
+    return lower_decode(cfg, shape, mesh)
+
+
+# --------------------------------------------------------------------------
+# per-cell record
+# --------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             probes: bool = True) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    base_cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, why = cell_is_runnable(base_cfg, shape)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+    }
+    if not ok:
+        rec.update(status="skip", skip_reason=why)
+        return rec
+    cfg = adapt_config(base_cfg, mesh)
+    chips = _all_axes_prod(mesh)
+    t0 = time.time()
+
+    # 1. full production program: compile proof + memory analysis
+    lowered = lower_cell(cfg, shape, mesh)
+    compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    rec["compile_s"] = round(time.time() - t0, 1)
+    rec["memory"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "peak_bytes": int(ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                          + ma.output_size_in_bytes - ma.alias_size_in_bytes),
+    }
+    rec["fits_hbm"] = rec["memory"]["peak_bytes"] <= 16 * 2 ** 30
+    full_cost = roofline.cost_of_compiled(compiled)
+    rec["full_program_collectives"] = {
+        k: round(v) for k, v in full_cost.by_collective.items()}
+
+    # 2. probe compiles (single-pod roofline table only)
+    if probes:
+        units = layer_units(cfg)
+        costs = {}
+        for u in (1, 2):
+            with flags.unrolled(PROBE_UNROLL):
+                low_u = lower_cell(reduce_layers(cfg, u), shape, mesh)
+                costs[u] = roofline.cost_of_compiled(low_u.compile())
+        per_unit_layers = (cfg.hybrid_attn_every
+                           if cfg.family == "hybrid" else 1)
+        total = roofline.extrapolate(costs[1], costs[2], 1, 2, units)
+        if shape.kind == "decode":
+            # HLO cost analysis charges every dynamic-(update-)slice on the
+            # KV cache at FULL-tensor bytes (verified: a 16 MiB cache DUS
+            # of a 256 KiB slice reports 33 MB accessed) and the CPU
+            # backend adds bf16->f32 cache upcasts that a TPU lowering
+            # doesn't have.  The decode step's true HBM traffic is exactly
+            # its resident state read once per token — weights + KV cache
+            # (= the compiled argument bytes) — plus the logits it writes:
+            # both taken from the compiled memory_analysis, not estimated.
+            true_bytes = (ma.argument_size_in_bytes
+                          + ma.output_size_in_bytes
+                          - ma.alias_size_in_bytes)
+            rec["memory_accounting"] = {
+                "hlo_bytes_per_device": total.bytes_accessed,
+                "resident_bytes_per_device": float(true_bytes),
+                "note": "decode memory term uses resident (argument+output"
+                        "-alias) bytes; HLO DUS accounting inflates "
+                        f"{total.bytes_accessed / max(true_bytes, 1):.1f}x",
+            }
+            total = dataclasses.replace(
+                total, bytes_accessed=float(true_bytes))
+        model_fl = roofline.model_flops_estimate(base_cfg, shape)
+        rl = roofline.make_roofline(total, chips, model_fl)
+        rec["cost"] = {
+            "flops_per_device": total.flops,
+            "bytes_per_device": total.bytes_accessed,
+            "wire_bytes_per_device": total.wire_bytes,
+            "by_collective": {k: round(v)
+                              for k, v in total.by_collective.items()},
+        }
+        rec["roofline"] = {
+            "compute_s": rl.compute_s,
+            "memory_s": rl.memory_s,
+            "collective_s": rl.collective_s,
+            "dominant": rl.dominant,
+            "bound_s": rl.bound_s,
+            "model_flops": model_fl,
+            "hlo_flops_total": rl.hlo_flops_total,
+            "useful_flops_frac": rl.useful_flops_frac,
+            "roofline_frac": rl.roofline_frac,
+        }
+    rec["status"] = "ok"
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", nargs="*", default=list(ARCH_IDS))
+    ap.add_argument("--shape", nargs="*", default=[s.name for s in SHAPES])
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--out", default=os.path.normpath(RESULTS))
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    results: Dict[str, Any] = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}
+    for multi in meshes[args.mesh]:
+        for arch in args.arch:
+            for shape_name in args.shape:
+                key = f"{arch}|{shape_name}|{'multi' if multi else 'single'}"
+                if key in results and results[key].get("status") in (
+                        "ok", "skip") and not args.force:
+                    print(f"[cached] {key}", flush=True)
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape_name, multi,
+                                   probes=not args.no_probes and not multi)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if multi else "16x16",
+                           "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc(limit=6)}
+                results[key] = rec
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                status = rec.get("status")
+                extra = ""
+                if status == "ok":
+                    mem = rec["memory"]["peak_bytes"] / 2 ** 30
+                    extra = f"peak={mem:.2f}GiB fits={rec['fits_hbm']}"
+                    if "roofline" in rec:
+                        rl = rec["roofline"]
+                        extra += (f" dominant={rl['dominant']}"
+                                  f" bound={rl['bound_s']*1e3:.1f}ms"
+                                  f" frac={rl['roofline_frac']:.2f}")
+                elif status == "error":
+                    extra = rec["error"][:200]
+                print(f"[done ] {key}: {status} {extra}", flush=True)
+
+    n_ok = sum(1 for r in results.values() if r.get("status") == "ok")
+    n_skip = sum(1 for r in results.values() if r.get("status") == "skip")
+    n_err = sum(1 for r in results.values() if r.get("status") == "error")
+    print(f"SUMMARY ok={n_ok} skip={n_skip} error={n_err}")
+
+
+if __name__ == "__main__":
+    main()

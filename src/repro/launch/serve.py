@@ -1,0 +1,108 @@
+"""Serving drivers.
+
+Engine mode (real JAX data plane, reduced configs on CPU):
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
+      --requests 32 --seq 64 --decode 8 --rate 4
+
+Fleet mode (the paper's full control loop over a workload trace):
+  PYTHONPATH=src python -m repro.launch.serve --fleet --arch llama3-8b \
+      --trace taxi --minutes 120 --slo 2.0
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.configs import get_config, get_reduced_config
+
+
+def run_engine(arch: str, n_requests: int, seq: int, decode: int,
+               rate: float, max_batch: int, seed: int = 0):
+    from repro.serving.engine import ServingEngine
+    cfg = get_reduced_config(arch)
+    if not cfg.supports_decode:
+        raise SystemExit(f"{arch} is encoder-only; engine mode needs decode")
+    eng = ServingEngine(cfg, max_batch=max_batch, max_len=seq + decode,
+                        seed=seed)
+    rng = np.random.default_rng(seed)
+    arrivals = []
+    t = 0.0
+    for _ in range(n_requests):
+        t += rng.exponential(1.0 / rate)
+        arrivals.append((t, rng.integers(1, cfg.vocab, seq)))
+    extras = None
+    if cfg.family == "vlm":
+        def extras(n):
+            import jax.numpy as jnp
+            return {"patches": jnp.asarray(
+                rng.standard_normal((n, cfg.n_patches, cfg.d_model)),
+                jnp.bfloat16)}
+    results = eng.run_queue(arrivals, decode_tokens=decode, extras_fn=extras)
+    lat = np.asarray([l for _, l in results])
+    print(json.dumps({
+        "requests": len(results),
+        "mean_latency_s": round(float(lat.mean()), 4),
+        "p95_latency_s": round(float(np.percentile(lat, 95)), 4),
+        "prefill_calls": eng.stats.prefill_calls,
+        "decode_calls": eng.stats.decode_calls,
+    }, indent=1))
+
+
+def run_fleet(arch: str, trace: str, minutes: int, slo: float,
+              seq: int, seed: int = 0, vertical: bool = True,
+              hedge: int = 0, strict_delta: bool = False):
+    from repro.core import ServiceSpec, SLOSpec, min_mem_gib, RequestShape
+    from repro.core.forecast import BaristaForecaster, ForecasterConfig
+    from repro.serving.cluster import FleetSimulator, SimConfig
+    from repro.workload.generator import get_trace
+    cfg = get_config(arch)
+    svc = ServiceSpec(
+        name=f"{arch}-svc", arch=arch, slo=SLOSpec(latency_bound=slo),
+        min_mem_gib=min_mem_gib(cfg, RequestShape(seq)), request_seq=seq)
+    tr = get_trace(trace)
+    (t_tr, y_tr), _, (t_te, y_te) = tr.split()
+    fc = BaristaForecaster(ForecasterConfig(), holidays=tr.holidays,
+                           seed=seed)
+    fc.warm_start(t_tr, y_tr, horizon=2)
+    path = fc.rolling_eval(t_te, y_te, horizon=2)
+
+    def forecast(now_s, horizon_s):
+        i = int(np.clip((now_s + horizon_s) / 60.0 - t_te[0], 0,
+                        len(path) - 1))
+        return float(path[i]) * slo / 60.0      # per-lambda-window demand
+
+    sim = FleetSimulator(svc, sim=SimConfig(
+        seed=seed, vertical=vertical, hedge_threshold=hedge,
+        strict_paper_delta=strict_delta))
+    res = sim.run(t_te[:minutes], y_te[:minutes], forecast)
+    print(json.dumps(res.summary(), indent=1))
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--fleet", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--decode", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=4.0)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--trace", default="taxi")
+    ap.add_argument("--minutes", type=int, default=120)
+    ap.add_argument("--slo", type=float, default=2.0)
+    ap.add_argument("--no-vertical", action="store_true")
+    ap.add_argument("--hedge", type=int, default=0)
+    args = ap.parse_args()
+    if args.fleet:
+        run_fleet(args.arch, args.trace, args.minutes, args.slo,
+                  seq=1024, vertical=not args.no_vertical, hedge=args.hedge)
+    else:
+        run_engine(args.arch, args.requests, args.seq, args.decode,
+                   args.rate, args.max_batch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.models.model import (  # noqa: F401
+    abstract_param_tree, forward, init_params, moe_blocks_for, param_axes,
+    param_shapes)
+from repro.models.decode import (  # noqa: F401
+    abstract_cache, cache_axes, decode_step, init_cache, prefill)

@@ -1,0 +1,342 @@
+"""Prefill + single-token decode for every family, with sharded KV caches.
+
+Cache layout (logical axes in brackets):
+  transformer:  k,v [layers, batch, kv_heads(None), kv_seq, head_dim]
+                ring_pos [kv_seq]          (SWA archs: ring buffer of `window`)
+  ssm:          ssm  [layers, batch, ssm_heads, head_dim(None), state] fp32
+                conv [layers, batch, conv(W-1), ssm_inner]
+  hybrid:       ssm/conv with [group, k, ...] leading dims + shared-attn k,v
+                per group [group, batch, None, kv_seq, head_dim]
+  'pos' is a batch-uniform int32 decode position (homogeneous request batches,
+  as the paper assumes homogeneous requests).
+
+Decode positions are batch-uniform; continuous batching groups requests by
+phase (see repro.serving.engine).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import flags
+from repro.models import ssm as ssm_lib
+from repro.models.model import (
+    Params, _attn_block, _attn_decode_block, _constrain, _ffn_block,
+    sharded_embed_lookup)
+from repro.models.layers import rms_norm
+
+def _cache_dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def cache_len_for(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.sliding_window:
+        return cfg.sliding_window   # ring buffer always spans the window
+    return seq_len
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, seq_len: int):
+    """(shape, dtype, logical axes) tree for the decode cache."""
+    out: Dict[str, Any] = {"pos": ((), jnp.int32, ())}
+    if cfg.family in ("ssm", "hybrid"):
+        s = cfg.ssm
+        d_in = s.expand * cfg.d_model
+        H, N, W = d_in // s.head_dim, s.d_state, s.conv_width
+        ch = d_in + 2 * N
+        if cfg.family == "ssm":
+            lead, lax_ = (cfg.n_layers,), ("layers",)
+        else:
+            k = cfg.hybrid_attn_every
+            lead, lax_ = (cfg.n_layers // k, k), ("group", "layers")
+        out["ssm"] = (lead + (batch, H, s.head_dim, N), jnp.float32,
+                      lax_ + ("batch", "ssm_heads", None, "state"))
+        out["conv"] = (lead + (batch, W - 1, ch), _cache_dtype(cfg),
+                       lax_ + ("batch", "conv", "ssm_inner"))
+        if cfg.family == "hybrid":
+            G = cfg.n_layers // cfg.hybrid_attn_every
+            S = cache_len_for(cfg, seq_len)
+            out["k"] = ((G, batch, cfg.n_kv_heads, S, cfg.head_dim),
+                        _cache_dtype(cfg), ("group", "batch", None, "kv_seq", "head_dim"))
+            out["v"] = out["k"]
+        return out
+    S = cache_len_for(cfg, seq_len)
+    out["k"] = ((cfg.n_layers, batch, cfg.n_kv_heads, S, cfg.head_dim),
+                _cache_dtype(cfg), ("layers", "batch", None, "kv_seq", "head_dim"))
+    out["v"] = out["k"]
+    if cfg.sliding_window:
+        out["ring_pos"] = ((S,), jnp.int32, ("kv_seq",))
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, Any]:
+    tree = cache_shapes(cfg, batch, seq_len)
+
+    def one(spec):
+        shape, dtype, _ = spec
+        if dtype == jnp.int32 and len(shape) == 1:   # ring_pos
+            return jnp.full(shape, -1, dtype)
+        return jnp.zeros(shape, dtype)
+
+    return {k: one(v) for k, v in tree.items()}
+
+
+def cache_axes(cfg: ModelConfig, batch: int, seq_len: int):
+    return {k: v[2] for k, v in cache_shapes(cfg, batch, seq_len).items()}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    return {k: jax.ShapeDtypeStruct(v[0], v[1])
+            for k, v in cache_shapes(cfg, batch, seq_len).items()}
+
+
+# ==========================================================================
+# decode step
+# ==========================================================================
+
+def decode_step(cfg: ModelConfig, params: Params, token: jax.Array,
+                cache: Dict[str, Any], mesh) -> Tuple[jax.Array, Dict[str, Any]]:
+    """token: [B, 1] int32 (or [B, 1, d] float for embed_inputs archs).
+    Returns (logits [B, 1, V], cache')."""
+    assert cfg.supports_decode
+    pos = cache["pos"]
+    if cfg.family in ("ssm", "hybrid"):
+        return _recurrent_decode_step(cfg, params, token, cache, mesh)
+
+    x = sharded_embed_lookup(mesh, params["embed"], token)
+    x = _constrain(x, mesh, ("batch", "seq", "embed"))
+    rp0 = cache.get("ring_pos")
+
+    # The KV cache rides the scan CARRY (not xs/ys): per-layer slices are
+    # read/written with dynamic_(update_)index so XLA updates the donated
+    # buffer in place — xs/ys stacking would materialize 2 extra full-cache
+    # copies in temps (observed: phi3 decode_32k 18.3 GiB -> fits after this).
+    kf, vf = cache["k"], cache["v"]
+
+    def body(carry, xs):
+        h, kf, vf, rp = carry
+        layer_p, li = xs
+        kc = jax.lax.dynamic_index_in_dim(kf, li, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vf, li, 0, keepdims=False)
+        a, kc, vc, rp = _attn_decode_block(
+            layer_p, h, cfg, pos, kc, vc, rp, mesh)
+        kf = jax.lax.dynamic_update_index_in_dim(kf, kc, li, 0)
+        vf = jax.lax.dynamic_update_index_in_dim(vf, vc, li, 0)
+        h = h + a
+        f, _ = _ffn_block(layer_p, h, cfg, mesh,
+                          batch_axes=(), expert_axes=_serve_expert_axes(mesh))
+        h = _constrain(h + f, mesh, ("batch", "seq", "embed"))
+        return (h, kf, vf, rp), None
+
+    L = kf.shape[0]
+    (x, ks, vs, rp), _ = jax.lax.scan(
+        body, (x, kf, vf, rp0),
+        (params["layers"], jnp.arange(L, dtype=jnp.int32)),
+        unroll=flags.scan_unroll())
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+    new_cache = dict(cache, k=ks, v=vs, pos=pos + 1)
+    if rp0 is not None:
+        new_cache["ring_pos"] = rp
+    return logits, new_cache
+
+
+def _recurrent_decode_step(cfg, params, token, cache, mesh):
+    pos = cache["pos"]
+    x = sharded_embed_lookup(mesh, params["embed"], token)  # [B,1,d]
+    x = _constrain(x, mesh, ("batch", "seq", "embed"))
+
+    if cfg.family == "ssm":
+        def body(h, xs):
+            lp, hs, cs = xs
+            y, (hs, cs) = ssm_lib.mamba2_forward(
+                lp, rms_norm(h[:, 0], lp["ln"], cfg.norm_eps), cfg,
+                h0=hs, conv_state=cs, decode=True)
+            return h + y[:, None], (hs, cs)
+
+        x, (hs, cs) = jax.lax.scan(
+            body, x, (params["layers"], cache["ssm"], cache["conv"]),
+            unroll=flags.scan_unroll())
+        new_cache = dict(cache, ssm=hs, conv=cs, pos=pos + 1)
+    else:
+        shared = params["shared_attn"]
+        kf, vf = cache["k"], cache["v"]   # [G,B,Hkv,S,hd] — carry, in place
+
+        def group_body(carry, xs):
+            h, kf, vf = carry
+            gp, hs_g, cs_g, gi = xs
+
+            def inner(h2, xs2):
+                lp, hs, cs = xs2
+                y, (hs, cs) = ssm_lib.mamba2_forward(
+                    lp, rms_norm(h2[:, 0], lp["ln"], cfg.norm_eps), cfg,
+                    h0=hs, conv_state=cs, decode=True)
+                return h2 + y[:, None], (hs, cs)
+
+            h, (hs_g, cs_g) = jax.lax.scan(inner, h, (gp, hs_g, cs_g))
+            kc = jax.lax.dynamic_index_in_dim(kf, gi, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vf, gi, 0, keepdims=False)
+            a, kc, vc, _ = _attn_decode_block(
+                shared, h, cfg, pos, kc, vc, None, mesh, norm_key="ln")
+            kf = jax.lax.dynamic_update_index_in_dim(kf, kc, gi, 0)
+            vf = jax.lax.dynamic_update_index_in_dim(vf, vc, gi, 0)
+            h = h + a
+            return (h, kf, vf), (hs_g, cs_g)
+
+        G = kf.shape[0]
+        (x, ks, vs), (hs, cs) = jax.lax.scan(
+            group_body, (x, kf, vf),
+            (params["layers"], cache["ssm"], cache["conv"],
+             jnp.arange(G, dtype=jnp.int32)), unroll=flags.scan_unroll())
+        new_cache = dict(cache, ssm=hs, conv=cs, k=ks, v=vs, pos=pos + 1)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+    return logits, new_cache
+
+
+def _serve_expert_axes(mesh):
+    """During decode the token batch is tiny: spread expert blocks over every
+    mesh axis so expert weights fit per-chip HBM (see DESIGN.md §5)."""
+    if mesh is None:
+        return ("model",)
+    return tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+
+
+# ==========================================================================
+# prefill
+# ==========================================================================
+
+def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+            mesh, max_len: Optional[int] = None, layer_xform=None):
+    """Run the full prompt, return (logits, cache at pos=S).
+
+    Decoder archs return last-position logits only [B, 1, V] (serving needs
+    nothing else and the full-seq head matmul is ~half the prefill FLOPs at
+    128k-vocab); encoders return per-frame logits [B, S, V] with cache=None.
+    ``max_len``: cache allocation length (>= S); defaults to S.
+    ``layer_xform``: optional per-layer param hook (serve-side FSDP gather).
+    """
+    if cfg.embed_inputs:
+        frames = batch["frames"]
+        x = frames @ params["in_proj"]
+        B, S = x.shape[:2]
+    else:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = sharded_embed_lookup(mesh, params["embed"], tokens)
+        if cfg.family == "vlm":
+            patches = batch["patches"] @ params["patch_proj"]
+            x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+            S = x.shape[1]
+    x = _constrain(x, mesh, ("batch", "seq", "embed"))
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    max_len = max(max_len or S, S)
+    causal = not cfg.is_encoder
+
+    if cfg.family in ("ssm", "hybrid"):
+        return _recurrent_prefill(cfg, params, x, positions, mesh, max_len,
+                                  layer_xform)
+
+    def body(h, layer_p):
+        if layer_xform is not None:
+            layer_p = layer_xform(layer_p)
+        a, (k, v) = _attn_block(layer_p, h, cfg, positions, mesh, causal=causal)
+        h = h + a
+        f, _ = _ffn_block(layer_p, h, cfg, mesh,
+                          batch_axes=("pod", "data"), expert_axes="model")
+        h = _constrain(h + f, mesh, ("batch", "seq", "embed"))
+        return h, (k.astype(_cache_dtype(cfg)), v.astype(_cache_dtype(cfg)))
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"],
+                               unroll=flags.scan_unroll())
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.is_encoder:
+        return jnp.einsum("bsd,dv->bsv", x, params["head"]), None
+
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], params["head"])
+    cache = _pack_kv_cache(cfg, ks, vs, S, max_len, mesh)
+    return logits, cache
+
+
+def _pack_kv_cache(cfg, ks, vs, S, max_len, mesh, lead="layers"):
+    """[L,B,Hkv,S,hd] prefill KV -> allocated decode cache (+ ring for SWA)."""
+    cache: Dict[str, Any] = {"pos": jnp.asarray(S, jnp.int32)}
+    S_c = cache_len_for(cfg, max_len)
+    if cfg.sliding_window:
+        w = cfg.sliding_window
+        if S >= w:
+            # entry for position p lands in ring slot p % w; for the
+            # contiguous window [S-w, S) that is a pure circular roll —
+            # O(1) copies instead of argsort + gather over the whole cache
+            tail, tailv = ks[..., S - w:, :], vs[..., S - w:, :]
+            cache["k"] = jnp.roll(tail, S % w, axis=-2)
+            cache["v"] = jnp.roll(tailv, S % w, axis=-2)
+            base = S - w
+            r = jnp.arange(w)
+            cache["ring_pos"] = (base + (r - base) % w).astype(jnp.int32)
+        else:
+            # positions 0..S-1 already sit in their slots (p % w = p)
+            pad = w - S
+            cache["k"] = jnp.pad(ks, [(0, 0)] * 3 + [(0, pad), (0, 0)])
+            cache["v"] = jnp.pad(vs, [(0, 0)] * 3 + [(0, pad), (0, 0)])
+            cache["ring_pos"] = jnp.where(
+                jnp.arange(w) < S, jnp.arange(w), -1).astype(jnp.int32)
+    else:
+        pad = S_c - S
+        cache["k"] = jnp.pad(ks, [(0, 0)] * 3 + [(0, pad), (0, 0)])
+        cache["v"] = jnp.pad(vs, [(0, 0)] * 3 + [(0, pad), (0, 0)])
+    axes = cache_axes(cfg, cache["k"].shape[1], max_len)
+    cache["k"] = _constrain(cache["k"], mesh, axes["k"])
+    cache["v"] = _constrain(cache["v"], mesh, axes["v"])
+    return cache
+
+
+def _recurrent_prefill(cfg, params, x, positions, mesh, max_len,
+                       layer_xform=None):
+    if cfg.family == "ssm":
+        def body(h, lp):
+            if layer_xform is not None:
+                lp = layer_xform(lp)
+            y, (hs, cs) = ssm_lib.mamba2_forward(
+                lp, rms_norm(h, lp["ln"], cfg.norm_eps), cfg)
+            return h + y, (hs, cs.astype(_cache_dtype(cfg)))
+
+        x, (hs, cs) = jax.lax.scan(body, x, params["layers"],
+                                   unroll=flags.scan_unroll())
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], params["head"])
+        cache = {"pos": jnp.asarray(x.shape[1], jnp.int32), "ssm": hs, "conv": cs}
+        return logits, cache
+
+    shared = params["shared_attn"]
+    S = x.shape[1]
+
+    def group_body(h, gp):
+        if layer_xform is not None:
+            gp = layer_xform(gp)
+
+        def inner(h2, lp):
+            y, (hs, cs) = ssm_lib.mamba2_forward(
+                lp, rms_norm(h2, lp["ln"], cfg.norm_eps), cfg)
+            return h2 + y, (hs, cs.astype(_cache_dtype(cfg)))
+
+        h, (hs_g, cs_g) = jax.lax.scan(inner, h, gp)
+        a, (k, v) = _attn_block(shared, h, cfg, positions, mesh,
+                                causal=True, norm_key="ln")
+        h = h + a
+        return h, (hs_g, cs_g, k.astype(_cache_dtype(cfg)), v.astype(_cache_dtype(cfg)))
+
+    x, (hs, cs, ks, vs) = jax.lax.scan(group_body, x, params["layers"],
+                                       unroll=flags.scan_unroll())
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], params["head"])
+    pad = cache_len_for(cfg, max_len) - S
+    ks = jnp.pad(ks, [(0, 0)] * 3 + [(0, pad), (0, 0)])
+    vs = jnp.pad(vs, [(0, 0)] * 3 + [(0, pad), (0, 0)])
+    cache = {"pos": jnp.asarray(S, jnp.int32), "ssm": hs, "conv": cs,
+             "k": ks, "v": vs}
+    return logits, cache

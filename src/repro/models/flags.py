@@ -1,0 +1,62 @@
+"""Process-wide lowering flags.
+
+``SCAN_UNROLL``: when an int > 1, layer scans and chunked-attention block
+scans lower unrolled.  Used ONLY by the roofline probe compiles (1-layer /
+2-layer variants) so per-layer flops/bytes/collective costs can be read from
+``cost_analysis`` by differencing — XLA's cost analysis counts a while body
+once regardless of trip count, so the production scanned program cannot be
+costed directly.  Production programs always lower with SCAN_UNROLL = 1.
+"""
+import os
+
+SCAN_UNROLL: int = 1
+ATTN_BLOCK: int = 0     # 0 = use call-site default; probes set 4096
+# Route attention / SSD through the Pallas kernels (TPU hot path; interpret
+# mode on CPU).  Default off on CPU — interpret mode is a correctness tool,
+# not a fast path.  REPRO_KERNELS=1 or kernels_on() flips it.
+USE_KERNELS: bool = os.environ.get("REPRO_KERNELS", "0") == "1"
+
+
+def scan_unroll() -> int:
+    return SCAN_UNROLL
+
+
+def attn_block() -> int:
+    return ATTN_BLOCK
+
+
+def use_kernels() -> bool:
+    return USE_KERNELS
+
+
+class kernels_on:
+    """Context manager: with kernels_on(): ... routes through Pallas."""
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+
+    def __enter__(self):
+        global USE_KERNELS
+        self._old = USE_KERNELS
+        USE_KERNELS = self.enabled
+
+    def __exit__(self, *exc):
+        global USE_KERNELS
+        USE_KERNELS = self._old
+
+
+class unrolled:
+    """Context manager: with unrolled(n): ... (probe lowering only)."""
+
+    def __init__(self, n: int, attn_block: int = 0):
+        self.n = n
+        self.ab = attn_block    # 0 = same adaptive blocks as production
+
+    def __enter__(self):
+        global SCAN_UNROLL, ATTN_BLOCK
+        self._old = (SCAN_UNROLL, ATTN_BLOCK)
+        SCAN_UNROLL, ATTN_BLOCK = self.n, self.ab
+
+    def __exit__(self, *exc):
+        global SCAN_UNROLL, ATTN_BLOCK
+        SCAN_UNROLL, ATTN_BLOCK = self._old

@@ -1,0 +1,362 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA attention (dense, chunked,
+and seq-sharded flash-decoding), SwiGLU — pure JAX, shardable under pjit with
+shard_map sub-blocks where the communication pattern must be explicit.
+
+All linear layers are bias-free (llama convention).  Computation dtype is the
+config dtype (bf16 by default); accumulation in fp32 where it matters.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import flags
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# norms / rope / activations
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, Hd]; positions: broadcastable to [..., S]."""
+    freqs = rope_freqs(x.shape[-1], theta)                    # [Hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs    # [..., S, Hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+# --------------------------------------------------------------------------
+# attention masks
+# --------------------------------------------------------------------------
+
+def attn_mask(q_pos: jax.Array, k_pos: jax.Array, *, causal: bool,
+              window: int = 0) -> jax.Array:
+    """[..., Sq, Sk] boolean mask — True = attend."""
+    m = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if causal:
+        m &= k_pos[..., None, :] <= q_pos[..., :, None]
+    if window:
+        m &= k_pos[..., None, :] > q_pos[..., :, None] - window
+    return m
+
+
+# --------------------------------------------------------------------------
+# dense attention (train / short prefill)
+# --------------------------------------------------------------------------
+
+def _divisor_block(n: int, want: int) -> int:
+    """Largest divisor of n that is <= want (block sizes must tile exactly)."""
+    want = min(want, n)
+    for b in range(want, 0, -1):
+        if n % b == 0:
+            return b
+    return n
+
+def _expand_kv(k: jax.Array, g: int) -> jax.Array:
+    """[B,S,Hkv,hd] -> [B,S,H,hd].  Repeating KV to full heads keeps every
+    einsum free of sharded-head-dim reshapes (H stays TP-sharded; the repeat
+    of a replicated-or-smaller Hkv tiles locally under SPMD)."""
+    return jnp.repeat(k, g, axis=2) if g > 1 else k
+
+
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array,
+                  ) -> jax.Array:
+    """q: [B,Sq,H,hd]  k,v: [B,Sk,Hkv,hd]  mask: [Sq,Sk] or [B,Sq,Sk]."""
+    B, Sq, H, hd = q.shape
+    g = H // k.shape[2]
+    k, v = _expand_kv(k, g), _expand_kv(v, g)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32)
+    scores *= hd ** -0.5
+    mask_b = mask[None, None] if mask.ndim == 2 else mask[:, None]
+    scores = jnp.where(mask_b, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", probs, v)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, window: int = 0,
+                      q_block: int = 0, kv_block: int = 0,
+                      q_offset=0) -> jax.Array:
+    """Flash-style online-softmax attention in pure jnp (lax.scan over KV
+    blocks, outer scan over Q blocks).  Bounded memory at 32k+ sequence
+    lengths; numerically identical to dense attention.  This is also the
+    oracle the Pallas flash kernel is tested against at scale.
+    ``q_offset``: global position of q row 0 (sequence-parallel shards).
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    g = H // k.shape[2]
+    k, v = _expand_kv(k, g), _expand_kv(v, g)
+    # adaptive block: big sequences amortize KV re-reads with larger tiles;
+    # snapped down to a divisor of S (vlm prompts are 4096+256 patches)
+    default = 4096 if Sq >= 16384 else 1024
+    q_block = _divisor_block(Sq, flags.attn_block() or q_block or default)
+    kv_block = _divisor_block(Sk, flags.attn_block() or kv_block or default)
+    nq, nk = Sq // q_block, Sk // kv_block
+    assert Sq % q_block == 0 and Sk % kv_block == 0
+    qb = q.reshape(B, nq, q_block, H, hd).transpose(1, 0, 3, 2, 4)
+    kb = k.reshape(B, nk, kv_block, H, hd).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, nk, kv_block, H, hd).transpose(1, 0, 3, 2, 4)
+
+    def q_step(_, qi_and_idx):
+        qi, iq = qi_and_idx                     # [B,H,qb,hd]
+        q_pos = q_offset + iq * q_block + jnp.arange(q_block)
+
+        @jax.checkpoint   # flash-style backward: recompute scores per block
+        def kv_step(carry, kj_and_idx):
+            m, l, o = carry
+            kj, vj, jk = kj_and_idx
+            k_pos = jk * kv_block + jnp.arange(kv_block)
+            s = jnp.einsum("bhqd,bhsd->bhqs", qi, kj).astype(jnp.float32)
+            s *= hd ** -0.5
+            msk = attn_mask(q_pos, k_pos, causal=causal, window=window)
+            s = jnp.where(msk[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            o_new = o * corr[..., None] + jnp.einsum(
+                "bhqs,bhsd->bhqd", p.astype(qi.dtype), vj).astype(jnp.float32)
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, H, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_block), jnp.float32)
+        o0 = jnp.zeros((B, H, q_block, hd), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(
+            kv_step, (m0, l0, o0), (kb, vb, jnp.arange(nk)),
+            unroll=min(flags.scan_unroll(), nk))
+        out = (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        return None, out
+
+    _, outs = jax.lax.scan(jax.checkpoint(q_step), None,
+                           (qb, jnp.arange(nq)),
+                           unroll=min(flags.scan_unroll(), nq))
+    # outs: [nq, B, H, qb, hd] -> [B, Sq, H, hd]
+    return outs.transpose(1, 0, 3, 2, 4).reshape(B, Sq, H, hd)
+
+
+def seq_parallel_attention(mesh, q, k, v, *, causal: bool, window: int = 0,
+                           batch_axes=("pod", "data"), seq_axis="model"):
+    """Sequence-parallel attention (§Perf hillclimb 3): Q rows sharded over
+    the model axis, K/V replicated across it; every shard runs flash
+    attention for its sequence slice against the full KV.
+
+    This is the TP strategy for archs whose head count does not divide the
+    model axis (smollm: 9 heads on 16 shards).  The alternatives both
+    waste ~an order of magnitude: replicating attention compute 16x, or
+    padding 9 -> 48 heads (5.3x redundant FLOPs).  Here compute splits
+    16-ways exactly; the price is the KV broadcast (Sk x Hkv x hd per
+    shard), tiny next to S^2 attention at 32k.
+    """
+    from repro.models.sharding import divisible_axes
+    B, Sq, H, hd = q.shape
+    if (seq_axis not in mesh.axis_names or mesh.shape[seq_axis] == 1
+            or Sq % mesh.shape[seq_axis] != 0):
+        return attention(q, k, v, causal=causal, window=window)
+    n = mesh.shape[seq_axis]
+    batch_axes = divisible_axes(mesh, batch_axes, B)
+    s_loc = Sq // n
+
+    def fn(q_loc, k_full, v_full):
+        offset = jax.lax.axis_index(seq_axis) * s_loc
+        return chunked_attention(q_loc, k_full, v_full, causal=causal,
+                                 window=window, q_offset=offset)
+
+    qspec = P(batch_axes, seq_axis, None, None)
+    kspec = P(batch_axes, None, None, None)
+    return jax.shard_map(fn, mesh=mesh, in_specs=(qspec, kspec, kspec),
+                         out_specs=qspec, check_vma=False)(q, k, v)
+
+
+def attention(q, k, v, *, causal: bool, window: int = 0,
+              dense_threshold: int = 2048) -> jax.Array:
+    if flags.use_kernels():
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.flash_attention_bshd(
+            q, k, v, causal=causal, window=window)
+    if q.shape[1] <= dense_threshold and k.shape[1] <= dense_threshold:
+        q_pos = jnp.arange(q.shape[1])
+        k_pos = jnp.arange(k.shape[1])
+        return gqa_attention(q, k, v, attn_mask(
+            q_pos, k_pos, causal=causal, window=window))
+    return chunked_attention(q, k, v, causal=causal, window=window)
+
+
+# --------------------------------------------------------------------------
+# decode: seq-sharded KV cache + flash-decoding partial-softmax combine
+# --------------------------------------------------------------------------
+
+def _partial_decode_attn(q, k, v, valid):
+    """Partial attention of one new-token query over a KV slice.
+
+    q: [B,H,hd]  k,v: [B,Hkv,S,hd]  valid: [B,S] or [S] bool.
+    Returns partial (o [B,H,hd] f32, m [B,H] f32, l [B,H] f32).
+    """
+    B, H, hd = q.shape
+    Hkv = k.shape[1]
+    g = H // Hkv
+    qg = q.reshape(B, Hkv, g, hd)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg, k).astype(jnp.float32) * hd ** -0.5
+    if valid.ndim == 1:
+        valid = valid[None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = s.max(-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p.astype(q.dtype), v).astype(jnp.float32)
+    return o.reshape(B, H, hd), m.reshape(B, H), l.reshape(B, H)
+
+
+def merge_partials(parts):
+    """Combine [(o,m,l), ...] partial softmax results (fp32, stable)."""
+    os, ms, ls = zip(*parts)
+    m = functools.reduce(jnp.maximum, ms)
+    l = sum(li * jnp.exp(mi - m) for li, mi in zip(ls, ms))
+    o = sum(oi * jnp.exp(mi - m)[..., None] for oi, mi in zip(os, ms))
+    return o, m, l
+
+
+def flash_decode_sharded(q, k_cache, v_cache, k_new, v_new, pos, *,
+                         seq_axis,
+                         ring_positions: Optional[jax.Array] = None,
+                         window: int = 0):
+    """One decode step against a sequence-sharded KV cache (flash-decoding).
+
+    Must be called INSIDE shard_map (or with seq_axis=None/() on one shard).
+    q: [B,H,hd]; k_cache/v_cache local slice [B,Hkv,S_loc,hd];
+    k_new/v_new: [B,Hkv,hd] (this step's KV, already roped);
+    pos: scalar int32 — global decode position (batch-uniform);
+    seq_axis: mesh axis name or tuple of names the cache seq dim is sharded
+    over (small-batch decode spreads KV over every idle axis);
+    ring_positions: [S_loc] global positions stored in each ring slot (SWA),
+    None for linear caches.
+
+    Returns (attn_out [B,H,hd], k_cache', v_cache', ring_positions').
+    """
+    B, Hkv, S_loc, hd = k_cache.shape
+    if isinstance(seq_axis, str):
+        seq_axis = (seq_axis,)
+    seq_axis = tuple(seq_axis or ())
+    idx = 0
+    for a in seq_axis:           # row-major linearized shard index
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    offset = idx * S_loc
+
+    if ring_positions is None:
+        slot_pos = offset + jnp.arange(S_loc)
+        valid = slot_pos < pos
+        write_slot = pos
+    else:
+        valid = (ring_positions > pos - window) & (
+            ring_positions < pos) & (ring_positions >= 0)
+        write_slot = pos % window
+
+    # -- write this step's KV into the owning shard's slice.  The select is
+    # slot-level (re-writing the old value when this shard does not own the
+    # slot) so XLA can update the donated cache buffer in place instead of
+    # materializing a full whole-cache copy per layer. ------------------------
+    local_slot = jnp.clip(write_slot - offset, 0, S_loc - 1)
+    owns = (write_slot >= offset) & (write_slot < offset + S_loc)
+    cur_k = jax.lax.dynamic_slice(
+        k_cache, (0, 0, local_slot, 0), (B, Hkv, 1, hd))
+    cur_v = jax.lax.dynamic_slice(
+        v_cache, (0, 0, local_slot, 0), (B, Hkv, 1, hd))
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, jnp.where(owns, k_new[:, :, None], cur_k),
+        (0, 0, local_slot, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, jnp.where(owns, v_new[:, :, None], cur_v),
+        (0, 0, local_slot, 0))
+    if ring_positions is not None:
+        cur_rp = jax.lax.dynamic_slice(ring_positions, (local_slot,), (1,))
+        ring_positions = jax.lax.dynamic_update_slice(
+            ring_positions,
+            jnp.where(owns, pos[None].astype(ring_positions.dtype), cur_rp),
+            (local_slot,))
+
+    # -- partial attention over the local slice (pre-write mask: 'valid'
+    #    excludes the new slot; the new token is merged exactly below) -------
+    o_c, m_c, l_c = _partial_decode_attn(q, k_cache, v_cache, valid)
+    if seq_axis:
+        # stable cross-shard combine
+        m = jax.lax.pmax(m_c, seq_axis)
+        scale = jnp.exp(m_c - m)
+        l = jax.lax.psum(l_c * scale, seq_axis)
+        o = jax.lax.psum(o_c * scale[..., None], seq_axis)
+    else:
+        o, m, l = o_c, m_c, l_c
+
+    # -- the new token always attends to itself ------------------------------
+    o_n, m_n, l_n = _partial_decode_attn(
+        q, k_new[:, :, None], v_new[:, :, None], jnp.ones((1,), bool))
+    o, m, l = merge_partials([(o, m, l), (o_n, m_n, l_n)])
+    out = (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    return out, k_cache, v_cache, ring_positions
+
+
+def decode_attention_block(mesh, q, k_cache, v_cache, k_new, v_new, pos,
+                           ring_positions=None, window: int = 0,
+                           batch_axes=("pod", "data"),
+                           seq_axes=("pod", "data", "model")):
+    """shard_map wrapper: q/k_new/v_new batch-sharded, cache seq-sharded.
+
+    The cache seq dim shards over every mesh axis not consumed by the batch
+    dim (flash-decoding): batch-heavy cells use ('data') for batch and
+    ('model') for KV; batch=1 long-context cells put all 256/512 chips on
+    the KV sequence.
+    """
+    from repro.models.sharding import divisible_axes
+    batch_axes = divisible_axes(mesh, batch_axes, q.shape[0])
+    remaining = tuple(a for a in seq_axes
+                      if a in mesh.axis_names and a not in batch_axes)
+    ax = divisible_axes(mesh, remaining, k_cache.shape[2])
+    qspec = P(batch_axes, None, None)
+    cspec = P(batch_axes, None, ax if ax else None, None)
+    rspec = P(ax if ax else None)
+
+    def fn(q, kc, vc, kn, vn, pos, rp):
+        out, kc, vc, rp = flash_decode_sharded(
+            q, kc, vc, kn, vn, pos, seq_axis=ax,
+            ring_positions=rp, window=window)
+        if rp is None:
+            rp = jnp.zeros((0,), jnp.int32)  # placeholder for uniform pytree
+        return out, kc, vc, rp
+
+    if ring_positions is None:
+        ring_in = jnp.zeros((0,), jnp.int32)
+    else:
+        ring_in = ring_positions
+
+    out, kc, vc, rp = jax.shard_map(
+        lambda q, kc, vc, kn, vn, pos, rp: fn(
+            q, kc, vc, kn, vn, pos,
+            rp if ring_positions is not None else None),
+        mesh=mesh,
+        in_specs=(qspec, cspec, cspec, qspec, qspec, P(), rspec),
+        out_specs=(qspec, cspec, cspec, rspec),
+        check_vma=False,
+    )(q, k_cache, v_cache, k_new, v_new, pos, ring_in)
+    return out, kc, vc, (rp if ring_positions is not None else None)

@@ -1,0 +1,515 @@
+"""Unified model definition for all assigned architectures.
+
+One parameter/apply convention covers the six families:
+  dense | moe  -> decoder LM (GQA attention + SwiGLU or MoE FFN)
+  vlm          -> decoder LM with stub patch embeddings prepended
+  encoder      -> bidirectional encoder with masked-frame prediction head
+  ssm          -> Mamba2 (SSD) stack
+  hybrid       -> Zamba2: Mamba2 groups + one shared attention block
+
+Params are nested dicts; every leaf has a parallel logical-axes tuple from
+``param_axes`` consumed by ``repro.models.sharding``.  Layer stacks are stored
+with a leading ``layers`` (or ``group``) dim and executed with ``lax.scan``
+(+ per-layer remat in training) so HLO size is O(1) in depth.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import flags
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    apply_rope, attention, decode_attention_block, rms_norm,
+    seq_parallel_attention, swiglu)
+from repro.models.sharding import (DEFAULT_RULES, divisible_axes,
+                                   logical_to_pspec)
+
+Params = Dict[str, Any]
+AUX_LOSS_WEIGHT = 0.01
+
+
+# ==========================================================================
+# init
+# ==========================================================================
+
+def moe_blocks_for(cfg: ModelConfig, mp: int) -> int:
+    """Storage blocking of routed experts for an mp-way expert-compute group."""
+    if cfg.moe is None:
+        return 0
+    return cfg.moe.n_routed * (mp // math.gcd(cfg.moe.n_routed, mp))
+
+
+def _attn_shapes(cfg: ModelConfig, prefix_layers: Tuple[int, ...] = ()):
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    L = prefix_layers
+    ax = tuple("layers" for _ in L)
+    sh = {
+        "wq": (L + (d, H, hd), ax + ("embed", "heads", "head_dim")),
+        "wk": (L + (d, Hkv, hd), ax + ("embed", "kv_heads", "head_dim")),
+        "wv": (L + (d, Hkv, hd), ax + ("embed", "kv_heads", "head_dim")),
+        "wo": (L + (H, hd, d), ax + ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        sh["q_norm"] = (L + (hd,), ax + ("head_dim",))
+        sh["k_norm"] = (L + (hd,), ax + ("head_dim",))
+    return sh
+
+
+def _ffn_shapes(cfg: ModelConfig, moe_blocks: int,
+                prefix_layers: Tuple[int, ...] = ()):
+    d = cfg.d_model
+    L = prefix_layers
+    ax = tuple("layers" for _ in L)
+    if cfg.moe is None:
+        f = cfg.d_ff
+        return {
+            "w_gate": (L + (d, f), ax + ("embed", "mlp")),
+            "w_up": (L + (d, f), ax + ("embed", "mlp")),
+            "w_down": (L + (f, d), ax + ("mlp", "embed")),
+        }
+    m = cfg.moe
+    tp_inner = moe_blocks // m.n_routed
+    fe = (m.d_ff_expert or cfg.d_ff) // tp_inner
+    sh = {
+        "router": (L + (d, m.n_routed), ax + ("embed", None)),
+        "we1": (L + (moe_blocks, d, fe), ax + ("expert", "embed", None)),
+        "we3": (L + (moe_blocks, d, fe), ax + ("expert", "embed", None)),
+        "we2": (L + (moe_blocks, fe, d), ax + ("expert", None, "embed")),
+    }
+    if m.n_shared:
+        fs = (m.d_ff_expert or cfg.d_ff) * m.n_shared
+        sh["ws_gate"] = (L + (d, fs), ax + ("embed", "mlp"))
+        sh["ws_up"] = (L + (d, fs), ax + ("embed", "mlp"))
+        sh["ws_down"] = (L + (fs, d), ax + ("mlp", "embed"))
+    return sh
+
+
+def _layer_shapes(cfg: ModelConfig, moe_blocks: int):
+    """Shapes+axes for one scanned decoder/encoder layer (leading L dim)."""
+    d = cfg.d_model
+    L = (cfg.n_layers,)
+    sh = {
+        "ln1": (L + (d,), ("layers", "embed")),
+        "ln2": (L + (d,), ("layers", "embed")),
+    }
+    sh.update(_attn_shapes(cfg, L))
+    sh.update(_ffn_shapes(cfg, moe_blocks, L))
+    return sh
+
+
+def _mamba_layer_shapes(cfg: ModelConfig, lead: Tuple[int, ...]):
+    ax = tuple("layers" if i < len(lead) else None for i in range(len(lead)))
+    base = ssm_lib.mamba2_params_shape(cfg)
+    out = {"ln": (lead + (cfg.d_model,), ax + ("embed",))}
+    for k, (shape, axes) in base.items():
+        out[k] = (lead + tuple(shape), ax + tuple(axes))
+    return out
+
+
+def param_shapes(cfg: ModelConfig, moe_blocks: int = 0) -> Dict[str, Any]:
+    """Full tree of (shape, logical axes)."""
+    d, V = cfg.d_model, cfg.padded_vocab
+    tree: Dict[str, Any] = {"final_norm": ((d,), ("embed",))}
+    if cfg.embed_inputs:  # audio stub frontend: frames arrive pre-embedded
+        tree["in_proj"] = ((d, d), ("embed", None))
+        tree["mask_embed"] = ((d,), ("embed",))
+    else:
+        tree["embed"] = ((V, d), ("vocab", "embed"))
+    if cfg.is_encoder:
+        tree["head"] = ((d, V), ("embed", "vocab"))
+    else:
+        tree["head"] = ((d, V), ("embed", "vocab"))
+    if cfg.family == "vlm":
+        tree["patch_proj"] = ((d, d), ("embed", None))
+
+    if cfg.family == "ssm":
+        tree["layers"] = _mamba_layer_shapes(cfg, (cfg.n_layers,))
+    elif cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every
+        G = cfg.n_layers // k
+        tree["layers"] = _mamba_layer_shapes(cfg, (G, k))
+        # one shared attention block (params stored once)
+        shared = {"ln": ((d,), ("embed",))}
+        shared.update(_attn_shapes(cfg))
+        tree["shared_attn"] = shared
+    else:
+        tree["layers"] = _layer_shapes(cfg, moe_blocks)
+    return tree
+
+
+def _is_shape_leaf(x):
+    return (isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple)
+            and all(isinstance(i, int) for i in x[0]))
+
+
+def param_axes(cfg: ModelConfig, moe_blocks: int = 0):
+    return jax.tree.map(lambda sa: sa[1], param_shapes(cfg, moe_blocks),
+                        is_leaf=_is_shape_leaf)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, moe_blocks: int = 0,
+                dtype: Optional[str] = None) -> Params:
+    dtype = dtype or cfg.dtype
+    shapes = param_shapes(cfg, moe_blocks)
+    leaves, treedef = jax.tree.flatten(shapes, is_leaf=_is_shape_leaf)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(sa, k):
+        shape, _ = sa
+        if len(shape) >= 2:
+            fan_in = shape[-2]
+            w = jax.random.normal(k, shape, jnp.float32) * (fan_in ** -0.5)
+        else:
+            w = jnp.ones(shape, jnp.float32)
+        return w.astype(dtype)
+
+    params = jax.tree.unflatten(treedef, [one(s, k) for s, k in zip(leaves, keys)])
+    # SSD stability: A_log ~ log(U[1,16]), dt_bias ~ inv_softplus(U[1e-3, 1e-1])
+    def fix(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name == "A_log":
+            u = jax.random.uniform(key, leaf.shape, jnp.float32, 1.0, 16.0)
+            return jnp.log(u).astype(leaf.dtype)
+        if name == "dt_bias":
+            u = jax.random.uniform(key, leaf.shape, jnp.float32, 1e-3, 1e-1)
+            return jnp.log(jnp.expm1(u)).astype(leaf.dtype)
+        if name == "D":
+            return jnp.ones_like(leaf)
+        if name in ("ln", "ln1", "ln2", "final_norm", "norm", "q_norm", "k_norm"):
+            return jnp.ones_like(leaf)
+        return leaf
+
+    return jax.tree.map_with_path(fix, params)
+
+
+def abstract_param_tree(cfg: ModelConfig, moe_blocks: int, dtype) -> Params:
+    """ShapeDtypeStructs for .lower() without allocation."""
+    return jax.tree.map(
+        lambda sa: jax.ShapeDtypeStruct(sa[0], dtype),
+        param_shapes(cfg, moe_blocks), is_leaf=_is_shape_leaf)
+
+
+# ==========================================================================
+# shared building blocks
+# ==========================================================================
+
+def _constrain(x, mesh, axes, rules=None):
+    if mesh is None or math.prod(mesh.devices.shape) == 1:
+        return x
+    spec = logical_to_pspec(x.shape, axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def sharded_embed_lookup(mesh, table: jax.Array, ids: jax.Array,
+                         model_axis="model", batch_axes=("pod", "data")):
+    """Vocab-sharded embedding lookup without gathering the table."""
+    mp = mesh.shape[model_axis] if model_axis in mesh.axis_names else 1
+    V = table.shape[0]
+    if mp == 1 or V % mp != 0:
+        return jnp.take(table, ids, axis=0)
+    b_ax = divisible_axes(mesh, batch_axes, ids.shape[0])
+
+    def fn(tbl, ids):
+        off = jax.lax.axis_index(model_axis) * tbl.shape[0]
+        loc = ids - off
+        ok = (loc >= 0) & (loc < tbl.shape[0])
+        out = jnp.where(ok[..., None],
+                        jnp.take(tbl, jnp.clip(loc, 0, tbl.shape[0] - 1), axis=0),
+                        0)
+        return jax.lax.psum(out, model_axis)
+
+    return jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(model_axis, None), P(b_ax, *([None] * (ids.ndim - 1)))),
+        out_specs=P(b_ax, *([None] * ids.ndim)),
+        check_vma=False)(table, ids)
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """logits [..., V] (possibly vocab-sharded under pjit), targets int [...]."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=jnp.float32)
+    true_logit = jnp.sum(logits * onehot, axis=-1)
+    nll = lse - true_logit
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def _loss_chunk(n: int, want: int = 512) -> int:
+    for b in range(min(want, n), 0, -1):
+        if n % b == 0:
+            return b
+    return n
+
+
+def lm_head_loss(x: jax.Array, head: jax.Array, targets: jax.Array,
+                 mask: Optional[jax.Array] = None, mesh=None,
+                 chunk: int = 512) -> jax.Array:
+    """Cross-entropy of ``x @ head`` without materializing [B,S,V] logits.
+
+    A remat'd ``lax.scan`` over sequence chunks computes each chunk's logits
+    (vocab stays TP-sharded in the matmul), reduces them to partial (sum_nll,
+    count), and discards them; the backward pass recomputes per chunk.  This
+    removes the dominant train-step temp at 128k-vocab (a [B,S,V] fp32 logits
+    + one-hot pair is ~5 GiB/device at 65k tokens/device).
+    """
+    B, S, d = x.shape
+    c = _loss_chunk(S, chunk)
+    n = S // c
+    # chunks are scanned: keep batch sharding, replicate seq inside each chunk
+    x = _constrain(x, mesh, ("batch", None, "embed"))
+    xs = jnp.moveaxis(x.reshape(B, n, c, d), 1, 0)           # [n, B, c, d]
+    ts = jnp.moveaxis(targets.reshape(B, n, c), 1, 0)        # [n, B, c]
+    ms = (jnp.moveaxis(mask.reshape(B, n, c), 1, 0) if mask is not None
+          else jnp.ones((n, B, c), jnp.float32))
+
+    @jax.checkpoint
+    def body(carry, xs_):
+        s_nll, s_cnt = carry
+        xc, tc, mc = xs_
+        logits = jnp.einsum("bcd,dv->bcv", xc, head).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(tc, logits.shape[-1], dtype=jnp.float32)
+        true_logit = jnp.sum(logits * onehot, axis=-1)
+        nll = (lse - true_logit) * mc
+        return (s_nll + jnp.sum(nll), s_cnt + jnp.sum(mc)), None
+
+    (s_nll, s_cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xs, ts, ms), unroll=flags.scan_unroll())
+    return s_nll / jnp.maximum(s_cnt, 1.0)
+
+
+def _attn_block(p, x, cfg: ModelConfig, positions, mesh, *, causal,
+                norm_key: str = "ln1"):
+    """Full-sequence attention sub-block (train / prefill).
+    Returns (out, (k, v)); k/v roped, cache layout [B, Hkv, S, hd]."""
+    g = lambda n: p[n]
+    h = rms_norm(x, p[norm_key], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, g("wq"))
+    k = jnp.einsum("bsd,dhk->bshk", h, g("wk"))
+    v = jnp.einsum("bsd,dhk->bshk", h, g("wv"))
+    if cfg.qk_norm:
+        q = rms_norm(q, g("q_norm"), cfg.norm_eps)
+        k = rms_norm(k, g("k_norm"), cfg.norm_eps)
+    q = apply_rope(q.swapaxes(1, 2), positions[:, None], cfg.rope_theta).swapaxes(1, 2)
+    k = apply_rope(k.swapaxes(1, 2), positions[:, None], cfg.rope_theta).swapaxes(1, 2)
+    tp = (dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+          if mesh is not None else 1)
+    if cfg.n_heads % tp != 0 and q.shape[1] % tp == 0:
+        # indivisible heads: split attention over the SEQUENCE instead of
+        # replicating it or padding heads (see seq_parallel_attention)
+        out = seq_parallel_attention(mesh, q, k, v, causal=causal,
+                                     window=cfg.sliding_window)
+    else:
+        q = _constrain(q, mesh, ("batch", "seq", "heads", "head_dim"))
+        k = _constrain(k, mesh, ("batch", "seq", "kv_heads", "head_dim"))
+        out = attention(q, k, v, causal=causal, window=cfg.sliding_window)
+    out = jnp.einsum("bshk,hkd->bsd", out, g("wo"))
+    kv = (k.swapaxes(1, 2), v.swapaxes(1, 2))      # [B, Hkv, S, hd]
+    return out, kv
+
+
+def _attn_decode_block(p, x, cfg: ModelConfig, pos, k_cache, v_cache,
+                       ring_pos, mesh, norm_key: str = "ln1"):
+    """Single-token attention against the sharded cache."""
+    g = lambda n: p[n]
+    h = rms_norm(x, p[norm_key], cfg.norm_eps)
+    # h: [B, 1, d]
+    q = jnp.einsum("bsd,dhk->bshk", h, g("wq"))[:, 0]      # [B,H,hd]
+    k = jnp.einsum("bsd,dhk->bshk", h, g("wk"))[:, 0]
+    v = jnp.einsum("bsd,dhk->bshk", h, g("wv"))[:, 0]
+    if cfg.qk_norm:
+        q = rms_norm(q, g("q_norm"), cfg.norm_eps)
+        k = rms_norm(k, g("k_norm"), cfg.norm_eps)
+    posf = pos.astype(jnp.float32)
+    q = apply_rope(q.swapaxes(0, 1)[:, :, None],
+                   jnp.broadcast_to(posf, (1,)), cfg.rope_theta)[:, :, 0].swapaxes(0, 1)
+    k = apply_rope(k.swapaxes(0, 1)[:, :, None],
+                   jnp.broadcast_to(posf, (1,)), cfg.rope_theta)[:, :, 0].swapaxes(0, 1)
+    out, k_cache, v_cache, ring_pos = decode_attention_block(
+        mesh, q, k_cache, v_cache, k, v, pos,
+        ring_positions=ring_pos, window=cfg.sliding_window)
+    out = _project_out_decode(mesh, out, g("wo"))[:, None]
+    return out, k_cache, v_cache, ring_pos
+
+
+def _project_out_decode(mesh, out, wo, axis="model"):
+    """Attention output projection for the single-token step, with the
+    head contraction done shard-local + psum of the [B, d] activation.
+
+    Left to sharding propagation, XLA gathers the head-sharded ``wo``
+    (151 MB/layer in f32 on mixtral) instead of psum-ing the tiny
+    activation (25 KB) when batch is small — a 6000x wire difference on
+    long_500k decode (§Perf hillclimb 1b)."""
+    H = out.shape[1]
+    if (mesh is None or axis not in mesh.axis_names
+            or mesh.shape[axis] <= 1 or H % mesh.shape[axis] != 0):
+        return jnp.einsum("bhk,hkd->bd", out, wo)
+    from repro.models.sharding import divisible_axes
+    b_ax = divisible_axes(mesh, ("pod", "data"), out.shape[0])
+
+    def fn(o, w):
+        return jax.lax.psum(jnp.einsum("bhk,hkd->bd", o, w), axis)
+
+    return jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(b_ax, axis, None), P(axis, None, None)),
+        out_specs=P(b_ax, None),
+        check_vma=False)(out, wo)
+
+
+def _ffn_block(p, x, cfg: ModelConfig, mesh, batch_axes, expert_axes):
+    """SwiGLU or MoE FFN on normed input.  Returns (out, aux)."""
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe is None:
+        return swiglu(h, p["w_gate"], p["w_up"], p["w_down"]), 0.0
+    y, aux = moe_lib.moe_ffn(
+        mesh, h, p["router"], p["we1"], p["we3"], p["we2"],
+        p.get("ws_gate"), p.get("ws_up"), p.get("ws_down"),
+        cfg, batch_axes=batch_axes, model_axis=expert_axes)
+    return y, aux
+
+
+# ==========================================================================
+# forward (train) for transformer families
+# ==========================================================================
+
+def _embed_inputs(cfg, params, batch, mesh):
+    """Returns (x [B,S,d], positions [B,S], loss_mask [B,S] or None,
+    targets)."""
+    if cfg.embed_inputs:                      # hubert: frames [B,S,d]
+        frames = batch["frames"]
+        x = frames @ params["in_proj"]
+        m = batch["mask"]
+        x = jnp.where(m[..., None], params["mask_embed"].astype(x.dtype), x)
+        B, S = x.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        return x, pos, m.astype(jnp.float32), batch["targets"]
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = sharded_embed_lookup(mesh, params["embed"], tokens)
+    mask = None
+    if cfg.family == "vlm":
+        patches = batch["patches"] @ params["patch_proj"]   # [B,P,d]
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+        S = x.shape[1]
+        # loss is computed on text positions only (logits sliced past patches)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    targets = batch["targets"]
+    return x, pos, mask, targets
+
+
+def transformer_forward(cfg: ModelConfig, params: Params, batch, mesh,
+                        remat: bool = True, layer_xform=None):
+    """Training forward -> (loss, metrics).  Families: dense/moe/vlm/encoder.
+
+    ``layer_xform`` (optional) is applied to each layer's parameter slice
+    inside the scan body — the hook the trainer uses to cast fp32 master
+    weights to bf16 + re-constrain (per-layer FSDP all-gather).
+    """
+    x, positions, loss_mask, targets = _embed_inputs(cfg, params, batch, mesh)
+    causal = not cfg.is_encoder
+    batch_axes = ("pod", "data")
+    x = _constrain(x, mesh, ("batch", "act_seq", "embed"))
+
+    def body(carry, layer_p):
+        h, aux = carry
+        if layer_xform is not None:
+            layer_p = layer_xform(layer_p)
+        a, _ = _attn_block(layer_p, h, cfg, positions, mesh, causal=causal)
+        h = h + a
+        f, aux_l = _ffn_block(layer_p, h, cfg, mesh, batch_axes, "model")
+        h = _constrain(h + f, mesh, ("batch", "act_seq", "embed"))
+        return (h, aux + aux_l), None
+
+    if remat:
+        body = jax.checkpoint(body)   # full recompute: min memory
+
+    if cfg.family in ("ssm", "hybrid"):
+        raise ValueError("use mamba_forward / hybrid_forward")
+    (x, aux), _ = jax.lax.scan(body, (x, 0.0), params["layers"],
+        unroll=flags.scan_unroll())
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.family == "vlm":
+        x = x[:, cfg.n_patches:]        # loss on text positions only
+    loss = lm_head_loss(x, params["head"], targets, loss_mask, mesh)
+    total = loss + AUX_LOSS_WEIGHT * aux
+    return total, {"xent": loss, "aux": aux}
+
+
+def mamba_forward(cfg: ModelConfig, params: Params, batch, mesh,
+                  remat: bool = True, layer_xform=None):
+    tokens = batch["tokens"]
+    x = sharded_embed_lookup(mesh, params["embed"], tokens)
+    x = _constrain(x, mesh, ("batch", "act_seq", "embed"))
+
+    def body(h, layer_p):
+        if layer_xform is not None:
+            layer_p = layer_xform(layer_p)
+        y, _ = ssm_lib.mamba2_forward(
+            layer_p, rms_norm(h, layer_p["ln"], cfg.norm_eps), cfg)
+        h = _constrain(h + y, mesh, ("batch", "act_seq", "embed"))
+        return h, None
+
+    if remat:
+        body = jax.checkpoint(body)   # full recompute: min memory
+    x, _ = jax.lax.scan(body, x, params["layers"],
+        unroll=flags.scan_unroll())
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    loss = lm_head_loss(x, params["head"], batch["targets"], mesh=mesh)
+    return loss, {"xent": loss, "aux": 0.0}
+
+
+def hybrid_forward(cfg: ModelConfig, params: Params, batch, mesh,
+                   remat: bool = True, layer_xform=None):
+    """Zamba2: groups of k mamba layers + shared attention block per group."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = sharded_embed_lookup(mesh, params["embed"], tokens)
+    x = _constrain(x, mesh, ("batch", "act_seq", "embed"))
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    shared = params["shared_attn"]
+
+    def group_body(h, group_p):
+        if layer_xform is not None:
+            group_p = layer_xform(group_p)
+
+        def inner(h2, lp):
+            y, _ = ssm_lib.mamba2_forward(
+                lp, rms_norm(h2, lp["ln"], cfg.norm_eps), cfg)
+            return h2 + y, None
+        h, _ = jax.lax.scan(inner, h, group_p)
+        a, _ = _attn_block(shared, h, cfg, positions, mesh, causal=True,
+                           norm_key="ln")
+        h = _constrain(h + a, mesh, ("batch", "act_seq", "embed"))
+        return h, None
+
+    if remat:
+        group_body = jax.checkpoint(group_body)  # full recompute
+    x, _ = jax.lax.scan(group_body, x, params["layers"],
+        unroll=flags.scan_unroll())
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    loss = lm_head_loss(x, params["head"], batch["targets"], mesh=mesh)
+    return loss, {"xent": loss, "aux": 0.0}
+
+
+def forward(cfg: ModelConfig, params, batch, mesh, remat: bool = True,
+            layer_xform=None):
+    if cfg.family == "ssm":
+        return mamba_forward(cfg, params, batch, mesh, remat, layer_xform)
+    if cfg.family == "hybrid":
+        return hybrid_forward(cfg, params, batch, mesh, remat, layer_xform)
+    return transformer_forward(cfg, params, batch, mesh, remat, layer_xform)

@@ -1,0 +1,193 @@
+"""Mixture-of-Experts FFN with explicit expert parallelism under shard_map.
+
+Design (see DESIGN.md §5):  token activations are replicated across the
+``model`` mesh axis (pure-TP convention), so expert parallelism needs **no
+all-to-all**: each model shard owns a block of (expert, hidden-slice) pairs,
+gathers its routed tokens locally via one shared sort, runs its expert FFNs,
+and a single ``psum`` over the model axis combines contributions.
+
+Expert placement: with ``mp`` model shards and ``E`` routed experts we use
+``ep = gcd(E, mp)`` expert groups x ``tp_inner = mp // ep`` hidden slices —
+  * deepseek-moe (E=64, mp=16): ep=16, tp_inner=1  -> 4 experts/shard (pure EP)
+  * mixtral      (E=8,  mp=16): ep=8,  tp_inner=2  -> 1 (expert, half-FFN)/shard
+Weights are stored pre-blocked as [E * tp_inner, d, F // tp_inner] so a plain
+PartitionSpec('model', ...) hands each shard exactly its block.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+class MoEPlan(NamedTuple):
+    n_routed: int
+    top_k: int
+    tp_inner: int       # hidden-dim slices per expert
+    blocks_per_shard: int
+    capacity_factor: float
+
+    @property
+    def n_blocks(self) -> int:
+        return self.n_routed * self.tp_inner
+
+
+def make_plan(cfg: ModelConfig, mp: int) -> MoEPlan:
+    m = cfg.moe
+    ep = math.gcd(m.n_routed, mp)
+    tp_inner = mp // ep
+    n_blocks = m.n_routed * tp_inner
+    assert n_blocks % mp == 0
+    return MoEPlan(m.n_routed, m.top_k, tp_inner, n_blocks // mp,
+                   m.capacity_factor)
+
+
+def capacity(n_tokens: int, top_k: int, n_experts: int, factor: float) -> int:
+    cap = int(math.ceil(n_tokens * top_k / n_experts * factor))
+    return max(8, ((cap + 7) // 8) * 8)
+
+
+def router(x: jax.Array, w_router: jax.Array, top_k: int):
+    """x: [T, d] -> (expert ids [T,k], gates [T,k], aux_loss scalar).
+
+    Softmax-then-topk routing with renormalized gates plus the switch-style
+    load-balance auxiliary loss.
+    """
+    logits = (x.astype(jnp.float32) @ w_router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # [T, E]
+    gates, ids = jax.lax.top_k(probs, top_k)                     # [T, k]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # aux: E * sum_e (fraction routed to e) * (mean prob of e)
+    E = w_router.shape[1]
+    onehot = jax.nn.one_hot(ids, E, dtype=jnp.float32).sum(1)    # [T, E]
+    load = onehot.mean(0)
+    importance = probs.mean(0)
+    aux = E * jnp.sum(load * importance)
+    return ids, gates.astype(x.dtype), aux
+
+
+def _moe_local(x, ids, gates, w1, w3, w2, plan: MoEPlan, model_axes):
+    """Per-shard expert compute.  x: [T, d] (local tokens, replicated over
+    the expert axes); w1/w3: [blocks_per_shard, d, F/tp_inner]; w2: [bps, F/tp, d].
+    Returns partial y [T, d] — caller psums over the expert axes.
+    """
+    T, d = x.shape
+    k = plan.top_k
+    cap = capacity(T, k, plan.n_routed, plan.capacity_factor)
+    shard = 0
+    if model_axes:
+        for a in model_axes:   # row-major linearized shard index
+            shard = shard * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+
+    # one shared sort of all (token, slot) assignments by expert id
+    flat_ids = ids.reshape(-1)                                   # [T*k]
+    flat_gates = gates.reshape(-1)
+    tok_idx = jnp.arange(T * k, dtype=jnp.int32) // k
+    order = jnp.argsort(flat_ids, stable=True)                   # [T*k]
+    sorted_tok = tok_idx[order]
+    sorted_gate = flat_gates[order]
+    counts = jax.ops.segment_sum(
+        jnp.ones_like(flat_ids, dtype=jnp.int32), flat_ids,
+        num_segments=plan.n_routed)                              # [E]
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+    # pad by `cap` so dynamic_slice never clamps (misalignment guard)
+    sorted_tok = jnp.concatenate([sorted_tok, jnp.zeros((cap,), jnp.int32)])
+    sorted_gate = jnp.concatenate(
+        [sorted_gate, jnp.zeros((cap,), sorted_gate.dtype)])
+
+    def one_block(b):
+        blk = shard * plan.blocks_per_shard + b                  # global block
+        e = blk // plan.tp_inner                                 # global expert
+        st, ct = starts[e], counts[e]
+        sel = jax.lax.dynamic_slice(sorted_tok, (st,), (cap,))
+        gat = jax.lax.dynamic_slice(sorted_gate, (st,), (cap,))
+        keep = jnp.arange(cap) < ct                              # drop overflow
+        xe = jnp.where(keep[:, None], x[jnp.clip(sel, 0, T - 1)], 0)
+        h = jax.nn.silu(xe @ w1[b]) * (xe @ w3[b])               # [cap, F/tp]
+        ye = (h @ w2[b]) * jnp.where(keep, gat, 0.0)[:, None]    # [cap, d]
+        return jax.ops.segment_sum(ye, jnp.clip(sel, 0, T - 1), num_segments=T)
+
+    y = jnp.zeros((T, d), x.dtype)
+    for b in range(plan.blocks_per_shard):   # small static loop (<=4)
+        y = y + one_block(b).astype(x.dtype)
+    return y
+
+
+def moe_ffn(mesh, x, w_router, w1, w3, w2, shared_w1, shared_w3, shared_w2,
+            cfg: ModelConfig, batch_axes=("data",), model_axis="model"):
+    """Full MoE FFN: routed experts (shard_map) + shared experts (plain TP).
+
+    x: [B, S, d] (batch-sharded).  Routed weights pre-blocked
+    [n_blocks, d, F/tp_inner] / [n_blocks, F/tp_inner, d], sharded on dim 0
+    over ``model_axis`` (a mesh axis name or tuple of names).
+    Returns (y [B,S,d], aux_loss).
+    """
+    B, S, d = x.shape
+    from repro.models.sharding import divisible_axes
+    batch_axes = divisible_axes(mesh, batch_axes, B)
+    if isinstance(model_axis, str):
+        model_axis = (model_axis,)
+    e_axes = tuple(a for a in model_axis if a in mesh.axis_names)
+    mp = 1
+    for a in e_axes:
+        mp *= mesh.shape[a]
+    plan = make_plan(cfg, mp)
+    ax = e_axes if mp > 1 else None
+    pm_axes = tuple(a for a in batch_axes if mesh.shape[a] > 1)
+    # Perf hillclimb 2: when the sequence divides the expert axes, combine
+    # expert outputs with psum_scatter on the seq dim instead of a full
+    # all-reduce — the residual stream is act_seq-sharded over 'model'
+    # anyway, so the all-gather half of the all-reduce was thrown away.
+    # Halves the dominant MoE-combine wire bytes (fwd + remat recompute).
+    scatter = bool(ax) and mp > 1 and S % mp == 0
+
+    def fn(x, w_router, w1, w3, w2):
+        xt = x.reshape(-1, d)
+        ids, gates, aux = router(xt, w_router, plan.top_k)
+        y = _moe_local(xt, ids, gates, w1, w3, w2, plan, ax)
+        y = y.reshape(x.shape[0], S, d)
+        if ax:
+            if scatter:
+                y = jax.lax.psum_scatter(y, ax, scatter_dimension=1,
+                                         tiled=True)
+            else:
+                y = jax.lax.psum(y, ax)
+        if pm_axes:
+            aux = jax.lax.pmean(aux, pm_axes)  # router replicated over model
+        return y, aux
+
+    bspec = P(batch_axes, None, None)
+    ospec = P(batch_axes, e_axes if scatter else None, None)
+    wspec = P(e_axes if mp > 1 else None, None, None)
+    y, aux = jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(bspec, P(None, None), wspec, wspec, wspec),
+        out_specs=(ospec, P()),
+        check_vma=False,
+    )(x, w_router, w1, w3, w2)
+
+    if shared_w1 is not None:
+        from repro.models.layers import swiglu
+        y = y + swiglu(x, shared_w1, shared_w3, shared_w2)
+    return y, aux
+
+
+def block_expert_weights(w: jax.Array, tp_inner: int, hidden_axis: int) -> jax.Array:
+    """[E, d, F] -> [E*tp_inner, d, F/tp_inner] (or [E, F, d] -> [E*t, F/t, d])."""
+    if tp_inner == 1:
+        return w
+    E = w.shape[0]
+    if hidden_axis == 2:
+        E_, d, F = w.shape
+        return w.reshape(E, d, tp_inner, F // tp_inner).transpose(
+            0, 2, 1, 3).reshape(E * tp_inner, d, F // tp_inner)
+    else:
+        E_, F, d = w.shape
+        return w.reshape(E, tp_inner, F // tp_inner, d).reshape(
+            E * tp_inner, F // tp_inner, d)

@@ -1,0 +1,171 @@
+"""Logical-axis sharding (MaxText-style rules with divisibility fallback).
+
+Every parameter / activation dimension carries a logical name; a rules table
+maps logical names to mesh axes.  ``logical_to_pspec`` drops a mapping whenever
+the dim size is not divisible by the mesh-axis size (e.g. smollm's 9 heads on a
+16-way model axis), falling back to replication for that dim only.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Tuple[Optional[str], ...]          # logical axis names per dim
+Rules = Dict[str, Union[str, Tuple[str, ...], None]]
+
+# Default rules for the production mesh axes ('pod', 'data', 'model').
+# 'pod' composes with 'data' for the batch dim when present.
+DEFAULT_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "seq": None,              # attention-internal activations: seq replicated
+    "act_seq": "model",       # residual stream between layers: sequence-
+                              # parallel over 'model' (Megatron-SP) — the
+                              # stored remat activations shrink by TP degree
+    "kv_seq": "model",        # decode KV cache: flash-decoding seq sharding
+    "vocab": "model",
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "expert": "model",        # EP when n_experts % model == 0
+    "expert_mlp": "model",    # expert-TP fallback (mixtral)
+    "ssm_inner": "model",     # mamba2 inner channels
+    "ssm_heads": "model",
+    "state": None,
+    "conv": None,
+    "layers": None,           # stacked scan dim
+    "group": None,            # zamba2 block-group dim
+}
+
+
+# Rule sets (see DESIGN.md §5):
+#  * TRAIN_STORAGE: fp32 master params + optimizer state.  FSDP: the 'embed'
+#    dim additionally shards over 'data'; per-layer all-gather happens inside
+#    the layer scan via a compute-rules constraint.
+#  * COMPUTE: activations / bf16 working weights during the step.
+#  * SERVE_STORE / SERVE_DECODE: bf16 serving weights.  Decode spreads expert
+#    blocks over every axis (weights-stationary, tiny activations).
+TRAIN_STORAGE_RULES: Rules = dict(DEFAULT_RULES, embed="data")
+COMPUTE_RULES: Rules = dict(DEFAULT_RULES)
+SERVE_STORE_RULES: Rules = dict(DEFAULT_RULES, embed="data")
+SERVE_DECODE_RULES: Rules = dict(
+    DEFAULT_RULES,
+    batch=("pod", "data"),
+    act_seq=None,                       # decode processes a single token
+    # WEIGHTS-STATIONARY decode (§Perf hillclimb 1): embed dims replicated
+    # across 'data'.  Sharding them (embed='data') re-gathers every weight
+    # matrix on EVERY decoded token — measured 1.82 GB/device/step of
+    # all-gather on llama3-8b (38 ms of ICI per token vs ~1 GB of HBM to
+    # just keep the weights resident).  Experts stay spread over all axes
+    # (they are the only tensors too big for model-axis-only residency).
+    embed=None,
+    expert=("pod", "data", "model"),
+    # KV seq takes every axis the batch dim left idle — batch=1 long-context
+    # cells spread the cache (and flash-decoding reads) over all 256/512
+    # chips instead of the 16-way model axis alone
+    kv_seq=("pod", "data", "model"),
+)
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def logical_to_pspec(
+    shape: Sequence[int],
+    axes: Axes,
+    mesh: Mesh,
+    rules: Optional[Rules] = None,
+) -> P:
+    """Map logical axes -> PartitionSpec honouring divisibility.
+
+    A rule entry may be a single mesh axis or a tuple of mesh axes (e.g. batch
+    over ('pod','data')).  Mesh axes absent from the mesh are dropped; a dim
+    whose size is not divisible by the product of its mapped axis sizes is
+    replicated instead.
+    """
+    rules = dict(DEFAULT_RULES if rules is None else rules)
+    sizes = _mesh_axis_sizes(mesh)
+    used = set()
+    out = []
+    for dim, name in zip(shape, axes):
+        if name is None or name not in rules or rules[name] is None:
+            out.append(None)
+            continue
+        want = rules[name]
+        want = (want,) if isinstance(want, str) else tuple(want)
+        picked = tuple(a for a in want if a in sizes and a not in used)
+        total = 1
+        for a in picked:
+            total *= sizes[a]
+        if not picked or total == 1 or dim % total != 0:
+            # fallback: try a shrinking prefix of the requested axes
+            ok = ()
+            prod = 1
+            for a in picked:
+                if dim % (prod * sizes[a]) == 0:
+                    ok = ok + (a,)
+                    prod *= sizes[a]
+                else:
+                    break
+            picked = ok
+        if not picked:
+            out.append(None)
+            continue
+        used.update(picked)
+        out.append(picked[0] if len(picked) == 1 else picked)
+    return P(*out)
+
+
+def divisible_axes(mesh: Mesh, axes: Sequence[str], dim: int
+                   ) -> Tuple[str, ...]:
+    """Longest prefix of ``axes`` (present in the mesh) whose cumulative size
+    divides ``dim`` — the shard_map batch-spec analogue of the replication
+    fallback (e.g. global_batch=1 decode cannot shard over 'data')."""
+    sizes = _mesh_axis_sizes(mesh)
+    out: Tuple[str, ...] = ()
+    prod = 1
+    for a in axes:
+        if a not in sizes:
+            continue
+        if dim % (prod * sizes[a]) != 0:
+            break
+        out = out + (a,)
+        prod *= sizes[a]
+    return out
+
+
+def make_sharding(
+    shape: Sequence[int], axes: Axes, mesh: Mesh, rules: Optional[Rules] = None
+) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_pspec(shape, axes, mesh, rules))
+
+
+def tree_pspecs(params, param_axes, mesh: Mesh, rules: Optional[Rules] = None):
+    """Build a pytree of PartitionSpecs parallel to ``params``.
+
+    ``params`` leaves may be concrete arrays or ShapeDtypeStructs; ``param_axes``
+    has the same tree structure with ``Axes`` tuples as leaves.
+    """
+    def one(p, ax):
+        return logical_to_pspec(p.shape, ax, mesh, rules)
+
+    return jax.tree.map(one, params, param_axes,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            a is None or isinstance(a, str) for a in x))
+
+
+def tree_shardings(params, param_axes, mesh: Mesh, rules: Optional[Rules] = None):
+    specs = tree_pspecs(params, param_axes, mesh, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def abstract_params(params):
+    """Concrete/abstract params -> ShapeDtypeStructs (for .lower())."""
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params)

@@ -1,0 +1,210 @@
+"""Mamba2 (SSD — state-space duality) block in pure JAX.
+
+Chunked SSD: intra-chunk terms are dense matmuls (MXU-friendly), inter-chunk
+state is carried by a short ``lax.scan`` over chunks.  Decode is the O(1)
+recurrent step.  Channel/head dims carry logical axes ``ssm_inner`` /
+``ssm_heads`` so TP shards the heads; B/C (single group) stay replicated.
+
+The Pallas kernel in ``repro.kernels.ssd_scan`` implements the same chunked
+algorithm with explicit VMEM tiling; ``ssd_chunked`` below doubles as its
+reference oracle at model scale.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models import flags
+from repro.models.layers import rms_norm
+
+
+def segsum_decay(da_chunk: jax.Array) -> jax.Array:
+    """da_chunk: [..., cl, H] -> decay matrix exp(cum_i - cum_j) masked lower-
+    triangular (i >= j), shape [..., H, cl, cl]."""
+    cum = jnp.cumsum(da_chunk, axis=-2)                     # [..., cl, H]
+    ci = jnp.swapaxes(cum, -1, -2)[..., :, None]            # [..., H, cl, 1]
+    cj = jnp.swapaxes(cum, -1, -2)[..., None, :]            # [..., H, 1, cl]
+    diff = ci - cj
+    cl = da_chunk.shape[-2]
+    mask = jnp.tril(jnp.ones((cl, cl), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0), cum
+
+
+def ssd_chunked(xh: jax.Array, dt: jax.Array, a: jax.Array, B_: jax.Array,
+                C_: jax.Array, D: jax.Array, chunk: int,
+                h0: jax.Array | None = None):
+    """Chunked SSD scan.
+
+    xh: [B, L, H, P]   dt: [B, L, H] (post-softplus)   a: [H] (negative)
+    B_, C_: [B, L, N]  D: [H]
+    Returns (y [B, L, H, P], final state [B, H, P, N]).
+    """
+    Bb, L, H, Pp = xh.shape
+    N = B_.shape[-1]
+    nc = L // chunk
+    assert L % chunk == 0, f"L={L} not divisible by chunk={chunk}"
+    f32 = jnp.float32
+
+    xhc = xh.reshape(Bb, nc, chunk, H, Pp)
+    dtc = dt.reshape(Bb, nc, chunk, H).astype(f32)
+    Bc = B_.reshape(Bb, nc, chunk, N)
+    Cc = C_.reshape(Bb, nc, chunk, N)
+    da = dtc * a.astype(f32)                                  # [B,nc,cl,H]
+
+    decay, cum = segsum_decay(da)                             # [B,nc,H,cl,cl]
+    # intra-chunk: Y[i] = sum_{j<=i} (C_i.B_j) decay_ij dt_j x_j
+    G = jnp.einsum("bcin,bcjn->bcij", Cc, Bc).astype(f32)     # [B,nc,cl,cl]
+    M = G[:, :, None] * decay                                  # [B,nc,H,cl,cl]
+    Yintra = jnp.einsum("bchij,bcjh,bcjhp->bcihp",
+                        M, dtc, xhc.astype(f32))
+
+    # per-chunk input->final-state contribution
+    total = cum[:, :, -1]                                     # [B,nc,H]
+    decay_to_end = jnp.exp(total[:, :, None] - cum)           # [B,nc,cl,H]
+    S = jnp.einsum("bcjh,bcjn,bcjhp->bchpn",
+                   dtc * decay_to_end, Bc, xhc.astype(f32))   # [B,nc,H,P,N]
+
+    # inter-chunk recurrence
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, Pp, N), f32)
+
+    def step(h, inp):
+        S_c, tot_c = inp                                      # [B,H,P,N], [B,H]
+        h_prev = h
+        h = h * jnp.exp(tot_c)[..., None, None] + S_c
+        return h, h_prev
+
+    hT, hprev = jax.lax.scan(
+        step, h0.astype(f32),
+        (S.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)))
+    hprev = hprev.transpose(1, 0, 2, 3, 4)                    # [B,nc,H,P,N]
+
+    # inter-chunk: Y[i] += C_i . (h_prev * exp(cum_i))   (cum: [B,nc,cl,H])
+    Yinter = jnp.einsum("bcin,bchpn,bcih->bcihp", Cc, hprev, jnp.exp(cum))
+
+    y = Yintra + Yinter + D.astype(f32)[None, None, None, :, None] * \
+        xhc.astype(f32)
+    return y.reshape(Bb, L, H, Pp).astype(xh.dtype), hT
+
+
+def ssd_decode_step(x_h, dt, a, B_, C_, D, h):
+    """One-token recurrent step.
+    x_h: [B,H,P]  dt: [B,H]  B_/C_: [B,N]  h: [B,H,P,N] (fp32).
+    Returns (y [B,H,P], h')."""
+    f32 = jnp.float32
+    da = jnp.exp(dt.astype(f32) * a.astype(f32))              # [B,H]
+    inp = jnp.einsum("bh,bhp,bn->bhpn", dt.astype(f32), x_h.astype(f32), B_.astype(f32))
+    h = h * da[..., None, None] + inp
+    y = jnp.einsum("bhpn,bn->bhp", h, C_.astype(f32))
+    y = y + D.astype(f32)[None, :, None] * x_h.astype(f32)
+    return y.astype(x_h.dtype), h
+
+
+def causal_conv(u: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv.  u: [B, L, Ch], w: [W, Ch]."""
+    W = w.shape[0]
+    acc = u * w[-1]
+    for i in range(1, W):
+        shifted = jnp.pad(u, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        acc = acc + shifted * w[W - 1 - i]
+    return acc
+
+
+def conv_decode_step(u_new: jax.Array, conv_state: jax.Array, w: jax.Array):
+    """u_new: [B, Ch]; conv_state: [B, W-1, Ch] (oldest first)."""
+    window = jnp.concatenate([conv_state, u_new[:, None]], axis=1)  # [B,W,Ch]
+    y = jnp.einsum("bwc,wc->bc", window, w)
+    return y, window[:, 1:]
+
+
+# --------------------------------------------------------------------------
+# full Mamba2 mixer layer
+# --------------------------------------------------------------------------
+
+def mamba2_params_shape(cfg: ModelConfig):
+    """Returns dict of (shape, logical axes) for one mamba2 mixer."""
+    d, s = cfg.d_model, cfg.ssm
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    N = s.d_state
+    W = s.conv_width
+    return {
+        "w_z": ((d, d_in), ("embed", "ssm_inner")),
+        "w_x": ((d, d_in), ("embed", "ssm_inner")),
+        "w_B": ((d, N), ("embed", "state")),
+        "w_C": ((d, N), ("embed", "state")),
+        "w_dt": ((d, H), ("embed", "ssm_heads")),
+        "conv_x": ((W, d_in), ("conv", "ssm_inner")),
+        "conv_B": ((W, N), ("conv", "state")),
+        "conv_C": ((W, N), ("conv", "state")),
+        "A_log": ((H,), ("ssm_heads",)),
+        "D": ((H,), ("ssm_heads",)),
+        "dt_bias": ((H,), ("ssm_heads",)),
+        "norm": ((d_in,), ("ssm_inner",)),
+        "w_out": ((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def mamba2_forward(p, x: jax.Array, cfg: ModelConfig,
+                   h0=None, conv_state=None, decode: bool = False):
+    """x: [B, L, d] (or [B, d] when decode=True).
+
+    Returns (y, (ssm_state, conv_state)).
+    conv_state layout: [B, W-1, d_in + 2N] (x-channels then B then C).
+    """
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    N = s.d_state
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if decode:
+        z = x @ p["w_z"]
+        u = jnp.concatenate([x @ p["w_x"], x @ p["w_B"], x @ p["w_C"]], -1)
+        wc = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], -1)
+        u, conv_state = conv_decode_step(u, conv_state, wc)
+        u = jax.nn.silu(u)
+        xc, B_, C_ = u[:, :d_in], u[:, d_in:d_in + N], u[:, d_in + N:]
+        dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32)
+                             + p["dt_bias"].astype(jnp.float32))
+        xh = xc.reshape(-1, H, s.head_dim)
+        y, h = ssd_decode_step(xh, dt, a, B_, C_, p["D"], h0)
+        y = y.reshape(-1, d_in)
+        y = rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+        return y @ p["w_out"], (h, conv_state)
+
+    Bb, L, _ = x.shape
+    z = x @ p["w_z"]
+    u = jnp.concatenate([x @ p["w_x"], x @ p["w_B"], x @ p["w_C"]], -1)
+    wc = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], -1)
+    u = jax.nn.silu(causal_conv(u, wc))
+    xc, B_, C_ = u[..., :d_in], u[..., d_in:d_in + N], u[..., d_in + N:]
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    # pad L to a chunk multiple; dt=0 on padding leaves the state untouched
+    chunk = min(s.chunk, L)
+    Lp = ((L + chunk - 1) // chunk) * chunk
+    if Lp != L:
+        padn = Lp - L
+        xc = jnp.pad(xc, ((0, 0), (0, padn), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, padn), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, padn), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, padn), (0, 0)))
+    xh = xc.reshape(Bb, Lp, H, s.head_dim)
+    if flags.use_kernels():
+        from repro.kernels import ops as kernel_ops
+        y, hT = kernel_ops.ssd_scan(xh, dt, a, B_, C_, p["D"], chunk=chunk)
+    else:
+        y, hT = ssd_chunked(xh, dt, a, B_, C_, p["D"], chunk)
+    y = y.reshape(Bb, Lp, d_in)[:, :L]
+    y = rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    # final conv state for prefill->decode handoff
+    W = s.conv_width
+    tail_raw = jnp.concatenate(
+        [x @ p["w_x"], x @ p["w_B"], x @ p["w_C"]], -1)[:, -(W - 1):]
+    pad = jnp.zeros((Bb, max(0, (W - 1) - L), tail_raw.shape[-1]), x.dtype)
+    conv_state = jnp.concatenate([pad, tail_raw], axis=1)
+    return y @ p["w_out"], (hT, conv_state)

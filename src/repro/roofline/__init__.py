@@ -1,0 +1,3 @@
+from repro.roofline.analysis import (  # noqa: F401
+    HBM_BW, ICI_BW, PEAK_FLOPS, ProgramCost, Roofline, collective_bytes,
+    cost_of_compiled, extrapolate, make_roofline, model_flops_estimate)

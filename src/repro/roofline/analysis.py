@@ -1,0 +1,204 @@
+"""Three-term roofline from compiled dry-run artifacts (TPU v5e target).
+
+Terms (per step, seconds):
+  compute    = per_device_HLO_FLOPs / peak_FLOPs_per_chip
+  memory     = per_device_HLO_bytes / HBM_bw_per_chip
+  collective = per_device_wire_bytes / ICI_link_bw
+
+``cost_analysis()`` counts a while-loop body ONCE regardless of trip count,
+so the scanned production program cannot be costed directly.  We therefore
+difference two *unrolled probe* compiles (1-layer and 2-layer variants of the
+same arch x shape x mesh) to get exact per-layer costs, then extrapolate:
+     total(L) = base + L * per_layer,   per_layer = cost(2L) - cost(1L),
+     base     = cost(1L) - per_layer.
+Collective wire bytes come from parsing the post-SPMD HLO text: for each
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute we
+take the RESULT shape and apply ring-algorithm byte factors with the replica-
+group size N parsed from the instruction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+# ---- hardware constants (TPU v5e) ----------------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (spec constant)
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+    "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?"
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.X)
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_RE2 = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_TUPLE_SHAPES_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUP_RE.search(line)
+    if m:
+        return int(m.group(2))                     # [G,N]<=[...] -> N
+    m = _GROUP_RE2.search(line)
+    if m:
+        return len(m.group(1).split(","))          # {{0,1,..}} first group
+    return 2
+
+
+def _wire_factor(op: str, n: int) -> float:
+    """Ring-algorithm bytes-on-wire per device / result bytes."""
+    if n <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n       # reduce-scatter + all-gather phases
+    if op == "all-gather":
+        return (n - 1) / n             # result is the gathered (full) buffer
+    if op == "reduce-scatter":
+        return (n - 1)                 # result is the scattered shard
+    if op == "all-to-all":
+        return (n - 1) / n
+    if op == "collective-permute":
+        return 1.0
+    return 1.0
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device wire bytes by collective kind, from post-SPMD HLO text.
+    NOTE: while-loop bodies are counted once (see module docstring)."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group(3)
+        n = _group_size(line)
+        # result may be a tuple (all-reduce of several operands)
+        head = line.split(op + "(")[0]
+        shapes = _TUPLE_SHAPES_RE.findall(head.split("=", 1)[1]) \
+            if "=" in head else [(m.group(1), m.group(2))]
+        total = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        out[op] = out.get(op, 0.0) + total * _wire_factor(op, n)
+    return out
+
+
+@dataclasses.dataclass
+class ProgramCost:
+    flops: float           # per device
+    bytes_accessed: float  # per device (HBM proxy)
+    wire_bytes: float      # per device (sum over collectives)
+    by_collective: Dict[str, float]
+
+    def __sub__(self, o: "ProgramCost") -> "ProgramCost":
+        return ProgramCost(
+            self.flops - o.flops,
+            self.bytes_accessed - o.bytes_accessed,
+            self.wire_bytes - o.wire_bytes,
+            {k: self.by_collective.get(k, 0) - o.by_collective.get(k, 0)
+             for k in set(self.by_collective) | set(o.by_collective)})
+
+    def scale_add(self, per_layer: "ProgramCost", n: int) -> "ProgramCost":
+        return ProgramCost(
+            self.flops + n * per_layer.flops,
+            self.bytes_accessed + n * per_layer.bytes_accessed,
+            self.wire_bytes + n * per_layer.wire_bytes,
+            {k: self.by_collective.get(k, 0) + n * per_layer.by_collective.get(k, 0)
+             for k in set(self.by_collective) | set(per_layer.by_collective)})
+
+
+def cost_of_compiled(compiled) -> ProgramCost:
+    ca = compiled.cost_analysis()
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    return ProgramCost(
+        flops=float(ca.get("flops", 0.0)),
+        bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+        wire_bytes=float(sum(coll.values())),
+        by_collective=coll)
+
+
+def extrapolate(cost_1l: ProgramCost, cost_2l: ProgramCost,
+                layers_1l: int, layers_2l: int, layers_full: int
+                ) -> ProgramCost:
+    """total(L) = base + L*per_layer from two probe points."""
+    per = ProgramCost(
+        (cost_2l.flops - cost_1l.flops) / (layers_2l - layers_1l),
+        (cost_2l.bytes_accessed - cost_1l.bytes_accessed) / (layers_2l - layers_1l),
+        (cost_2l.wire_bytes - cost_1l.wire_bytes) / (layers_2l - layers_1l),
+        {k: (cost_2l.by_collective.get(k, 0) - cost_1l.by_collective.get(k, 0))
+         / (layers_2l - layers_1l)
+         for k in set(cost_1l.by_collective) | set(cost_2l.by_collective)})
+    base = cost_1l.scale_add(per, -layers_1l)
+    return base.scale_add(per, layers_full)
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float         # 6ND (train) / 2ND (inference), whole cluster
+    hlo_flops_total: float     # per-device flops x chips
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS — how much compiled compute is useful."""
+        return self.model_flops / max(self.hlo_flops_total, 1.0)
+
+    @property
+    def roofline_frac(self) -> float:
+        """Achievable fraction of compute roofline if the step runs at its
+        dominant bound: ideal_compute_time / bound_time, using MODEL_FLOPS
+        as the useful work."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        return ideal / max(self.bound_s, 1e-30)
+
+
+def make_roofline(cost: ProgramCost, chips: int, model_flops: float
+                  ) -> Roofline:
+    return Roofline(
+        compute_s=cost.flops / PEAK_FLOPS,
+        memory_s=cost.bytes_accessed / HBM_BW,
+        collective_s=cost.wire_bytes / ICI_BW,
+        model_flops=model_flops,
+        hlo_flops_total=cost.flops * chips,
+        chips=chips)
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """Cluster-total useful FLOPs per step.
+    train: 6 * N_active * tokens;  prefill: 2 * N_active * tokens;
+    decode: 2 * N_active * batch (one token per sequence)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,16 @@
+"""Serving data plane + fleet simulation.
+
+  engine          real JAX serving engine (prefill/decode, continuous
+                  batching) — runs reduced configs on CPU, production
+                  configs on TPU slices
+  batching        request queue + phase-grouped batcher
+  load_balancer   round-robin frontend LB, least-loaded backend LB with
+                  optional hedged requests (straggler mitigation)
+  cluster         discrete-event fleet simulator wiring the BARISTA
+                  control plane to sampled request latencies (paper §V)
+"""
+from repro.serving.batching import Request, RequestQueue
+from repro.serving.cluster import FleetSimulator, SimConfig, SimResult
+from repro.serving.load_balancer import LeastLoadedLB, RoundRobinLB
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,64 @@
+"""Request types + queueing for the serving engine and the fleet simulator.
+
+The paper's requests are homogeneous single-shot predictions; the engine
+additionally supports autoregressive requests (prompt + N decode tokens)
+batched continuously by phase — requests in the same phase (prefill vs
+decode) share a program invocation, which is how the TPU engine keeps the
+MXU busy at small per-request batch sizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+_req_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    arrival: float
+    service: str
+    seq: int = 1024                  # prompt tokens
+    decode_tokens: int = 0
+    id: int = dataclasses.field(default_factory=lambda: next(_req_ids))
+    # filled by the dispatcher
+    replica_id: Optional[int] = None
+    start: Optional[float] = None
+    finish: Optional[float] = None
+    hedged_to: Optional[int] = None  # straggler mitigation: duplicate target
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.finish is None:
+            return None
+        return self.finish - self.arrival
+
+
+class RequestQueue:
+    """FIFO with phase peeking for continuous batching."""
+
+    def __init__(self, max_pending: int = 100_000):
+        self._q: Deque[Request] = deque()
+        self.max_pending = max_pending
+        self.dropped = 0
+
+    def push(self, req: Request) -> bool:
+        if len(self._q) >= self.max_pending:
+            self.dropped += 1
+            return False
+        self._q.append(req)
+        return True
+
+    def pop_batch(self, n: int) -> List[Request]:
+        out = []
+        while self._q and len(out) < n:
+            out.append(self._q.popleft())
+        return out
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)

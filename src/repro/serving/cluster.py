@@ -1,0 +1,364 @@
+"""Discrete-event fleet simulator — the paper's evaluation harness (§V).
+
+Wires the full BARISTA loop together:
+
+    workload trace -> forecaster -> Algorithm 1/2 provisioner
+          -> slice lifecycle (Fig. 2 states, registries, leases)
+          -> least-loaded backend LB -> per-request latency sampling
+          -> latency monitor -> reactive vertical scaler
+          -> SLO compliance + lease-cost accounting
+
+Per-request latencies come from the roofline-calibrated LatencySampler
+(repro.core.latency_model), which on real hardware is replaced by the real
+engine (repro.serving.engine) — the control plane cannot tell the
+difference, which is the point of the split.
+
+Event model: each simulated minute of the trace is expanded into uniformly
+spaced request arrivals (the paper uniformly subdivides per-minute counts,
+§V-D); a 5-second monitor tick drives the latency monitor + vertical
+scaler; a 60-second tick drives the provisioner.  Replicas are single-
+server FIFO queues (paper: 'each backend processes a single request at a
+time').
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.core.cost import FLAVORS, LeaseLedger, SliceFlavor, get_flavor
+from repro.core.estimator import FlavorProfile
+from repro.core.latency_model import (LatencySampler, RequestShape,
+                                      flavor_feasible, min_mem_gib)
+from repro.core.lifecycle import Replica, SetupTimes, State, setup_times_for
+from repro.core.profiler import LatencyProfile
+from repro.core.provisioner import (ProvisionerConfig, ResourceProvisioner)
+from repro.core.slo import LatencyMonitor, ServiceSpec, SLOSpec
+from repro.core.vertical import VerticalConfig, VerticalScaler
+from repro.serving.batching import Request
+from repro.serving.load_balancer import LeastLoadedLB
+
+
+@dataclasses.dataclass
+class SimConfig:
+    monitor_tick_s: float = 5.0
+    provision_tick_s: float = 60.0
+    tau_vm: float = 3600.0
+    vertical: bool = True
+    hedge_threshold: int = 0          # 0 = paper-faithful (no hedging)
+    hedge_timeout_factor: float = 0.0  # >0: reissue to a backup replica if
+                                       # the primary exceeds factor*p95
+                                       # (straggler mitigation; beyond-paper)
+    vertical_margin: float = 0.7      # shrink when p95 < margin * bound
+    warm_pool: int = 1                # replicas pre-deployed at t=0
+    seed: int = 0
+    strict_paper_delta: bool = False
+    flops_efficiency: float = 0.55
+    max_queue_wait_factor: float = 50.0   # drop guard (requests, not SLO)
+
+
+@dataclasses.dataclass
+class SimResult:
+    latencies: np.ndarray             # per-request response times
+    slo_bound: float
+    request_compliance: float         # fraction of requests within bound
+    window_compliance: float          # fraction of 5s windows within bound
+    total_cost_usd: float
+    chip_seconds: float
+    chip_seconds_saved: float         # vertical scaler savings
+    provision_history: List[dict]
+    replica_timeline: List[Tuple[float, int, int]]   # (t, serving, leased)
+    vertical_events: int
+    hedged: int
+    dropped: int
+
+    def summary(self) -> dict:
+        return {
+            "requests": int(len(self.latencies)),
+            "slo_request_compliance": round(self.request_compliance, 4),
+            "slo_window_compliance": round(self.window_compliance, 4),
+            "p95_latency_s": round(float(np.percentile(self.latencies, 95)), 4)
+            if len(self.latencies) else None,
+            "total_cost_usd": round(self.total_cost_usd, 2),
+            "chip_seconds_saved": round(self.chip_seconds_saved, 1),
+            "vertical_events": self.vertical_events,
+            "dropped": self.dropped,
+        }
+
+
+class FleetSimulator:
+    """Implements the provisioner's Infrastructure protocol + the request
+    data path."""
+
+    def __init__(self, service: ServiceSpec,
+                 flavors: Sequence[SliceFlavor] = FLAVORS,
+                 sim: SimConfig = SimConfig(),
+                 sampler: Optional[LatencySampler] = None,
+                 model_cfg: Optional[ModelConfig] = None):
+        self.service = service
+        self.model_cfg = model_cfg or get_config(service.arch)
+        self.flavors = list(flavors)
+        self.sim = sim
+        self.sampler = sampler or LatencySampler(seed=sim.seed)
+        self.shape = RequestShape(service.request_seq, service.decode_tokens)
+        self.setup = setup_times_for(self.model_cfg)
+        self.rng = np.random.default_rng(sim.seed)
+
+        self.replicas: Dict[int, Replica] = {}
+        self.lb = LeastLoadedLB(hedge_threshold=sim.hedge_threshold)
+        self.ledger = LeaseLedger(tau_vm=sim.tau_vm)
+        self.monitor = LatencyMonitor(service.slo, window=sim.monitor_tick_s)
+        self.vertical = VerticalScaler(
+            service.slo, VerticalConfig(margin=sim.vertical_margin)) \
+            if sim.vertical else None
+        self._replica_events: Dict[int, List[Tuple[float, float]]] = {}
+        self.replica_timeline: List[Tuple[float, int, int]] = []
+        self.finished: List[Request] = []
+        self.dropped = 0
+        self._profile_p95: float = 0.0   # chosen-flavor p95 (hedge timeout)
+
+    # ---------------------------------------------------------- profiles
+    def flavor_profiles(self, n_samples: int = 2000,
+                        profiler_cls=LatencyProfile) -> List[FlavorProfile]:
+        """Offline phase: profile every flavor (paper Fig. 1 + §IV-B)."""
+        out = []
+        for f in self.flavors:
+            feasible = flavor_feasible(self.model_cfg, self.shape, f)
+            if feasible:
+                samples = self.sampler.sample(
+                    self.model_cfg, self.shape, f.chips, n=n_samples,
+                    flops_efficiency=self.sim.flops_efficiency)
+                prof = profiler_cls.from_samples(samples)
+                out.append(FlavorProfile(f, prof.p95, True))
+            else:
+                out.append(FlavorProfile(f, math.inf, False))
+        return out
+
+    # ----------------------------------------------- Infrastructure impl
+    def deploy_vm(self, flavor_name: str, now: float) -> Replica:
+        r = Replica(flavor=get_flavor(flavor_name), service=self.service.name)
+        r.transition(State.VM_WARM, now, self.setup)
+        r.lease_expiry = self.ledger.open(r.id, r.flavor, now)
+        self.replicas[r.id] = r
+        return r
+
+    def download_container(self, rid: int, now: float) -> None:
+        r = self.replicas.get(rid)
+        if r and r.state == State.VM_WARM and now >= r.ready_at:
+            r.transition(State.CONTAINER_COLD, now, self.setup)
+
+    def load_model(self, rid: int, now: float) -> None:
+        r = self.replicas.get(rid)
+        if r and r.state == State.CONTAINER_COLD and now >= r.ready_at:
+            r.transition(State.CONTAINER_WARM, now, self.setup)
+            r.colocated_batch = False
+
+    def unload_model(self, rid: int, now: float) -> None:
+        r = self.replicas.get(rid)
+        if r and r.state == State.CONTAINER_WARM:
+            r.transition(State.CONTAINER_COLD, now, self.setup)
+            r.colocated_batch = True         # batch jobs take the slice
+
+    def terminate_vm(self, rid: int, now: float) -> None:
+        if rid in self.replicas:
+            self.ledger.close(rid)
+            del self.replicas[rid]
+
+    def serving_replicas(self, now: float) -> List[Replica]:
+        return [r for r in self.replicas.values() if r.is_serving(now)]
+
+    def lb_update(self, now: float) -> None:
+        self.lb.update(list(self.replicas.values()))
+
+    # ------------------------------------------------------- data plane
+    def _service_time(self, r: Replica) -> float:
+        # stateful rng: each request is an independent draw (the keyed
+        # profiling stream would return one constant per (arch, chips))
+        return float(self.sampler.sample(
+            self.model_cfg, self.shape, max(r.effective_chips(), 1), n=1,
+            colocated=r.colocated_batch,
+            flops_efficiency=self.sim.flops_efficiency, rng=self.rng)[0])
+
+    def _dispatch(self, req: Request, now: float) -> bool:
+        primary, hedge = self.lb.pick(now)
+        if primary is None:
+            return False
+        # single-server FIFO: the request waits for the replica's queue
+        start = max(now, primary.busy_until)
+        dur = self._service_time(primary)
+        finish = start + dur
+        if hedge is not None:
+            h_start = max(now, hedge.busy_until)
+            h_finish = h_start + self._service_time(hedge)
+            if h_finish < finish:          # hedge wins; primary still busy
+                hedge.busy_until = h_finish
+                hedge.queue += 1
+                finish = h_finish
+        elif self.sim.hedge_timeout_factor > 0 and self._profile_p95 > 0:
+            # timeout hedge: reissue to the runner-up replica when the
+            # primary has not answered within factor * profiled p95 —
+            # absorbs straggler replicas (transient 8x slowdowns) without
+            # duplicating every request
+            timeout = self.sim.hedge_timeout_factor * self._profile_p95
+            if dur > timeout:
+                # service-duration trigger: the replica is a straggler
+                # (hedging on total wait conflates queueing with slowness
+                # and spirals under load); budget guard: skip if the
+                # backup is itself backed up
+                live = [r for r in self.lb.backends
+                        if r.is_serving(now) and r.id != primary.id
+                        and r.busy_until - now <= 2 * timeout]
+                if live:
+                    backup = min(live, key=lambda r: (r.queue, r.busy_until))
+                    h_start = max(start + timeout, backup.busy_until)
+                    h_finish = h_start + self._service_time(backup)
+                    if h_finish < finish:
+                        backup.busy_until = h_finish
+                        backup.queue += 1
+                        finish = h_finish
+                    self.lb.hedged += 1
+        primary.busy_until = max(primary.busy_until, finish)
+        primary.queue += 1
+        req.replica_id = primary.id
+        req.start, req.finish = start, finish
+        self.monitor.record(finish, finish - req.arrival)
+        self._replica_events.setdefault(primary.id, []).append(
+            (finish, finish - req.arrival))
+        self.finished.append(req)
+        return True
+
+    def _monitor_tick(self, now: float) -> None:
+        # retire completed connections
+        for r in self.replicas.values():
+            if r.busy_until <= now:
+                r.queue = 0
+        self.monitor.roll(now)
+        if self.vertical is None:
+            return
+        lo = now - self.sim.monitor_tick_s
+        for r in self.serving_replicas(now):
+            ev = self._replica_events.get(r.id, [])
+            lat = [l for t, l in ev if lo < t <= now]
+            p95 = float(np.percentile(lat, self.service.slo.percentile)) \
+                if lat else None
+            self.vertical.adjust(r, p95, now)
+            self._replica_events[r.id] = [e for e in ev if e[0] > lo]
+
+    # ---------------------------------------------------------- run loop
+    def run(self, t_minutes: np.ndarray, y_counts: np.ndarray,
+            forecast: Callable[[float, float], float],
+            provisioner_cfg: Optional[ProvisionerConfig] = None
+            ) -> SimResult:
+        """Simulate the trace (per-minute counts).  ``forecast(now_s,
+        horizon_s) -> y'`` returns requests per provisioning window."""
+        pcfg = provisioner_cfg or ProvisionerConfig(
+            tick_s=self.sim.provision_tick_s, tau_vm=self.sim.tau_vm,
+            strict_paper_delta=self.sim.strict_paper_delta)
+        profiles = self.flavor_profiles()
+        from repro.core.estimator import resource_estimation as _re
+        try:
+            est = _re(1.0, self.service.slo.latency_bound, profiles)
+            self._profile_p95 = next(
+                p.t_p95 for p in profiles if p.flavor == est.flavor)
+        except (ValueError, StopIteration):
+            self._profile_p95 = 0.0
+        prov = ResourceProvisioner(
+            self, self.setup, self.service.slo.latency_bound, profiles,
+            forecast, pcfg)
+
+        t0 = float(t_minutes[0]) * 60.0
+        horizon_end = float(t_minutes[-1] + 1) * 60.0
+
+        # warm pool: pre-deployed replicas skip the cold start at t=0
+        # (the paper's experiment starts with the service already deployed)
+        for _ in range(self.sim.warm_pool):
+            r = self.deploy_vm(
+                self._initial_flavor(profiles).name, t0 - self.setup.t_setup)
+            r.transition(State.CONTAINER_COLD, t0 - self.setup.t_setup
+                         + self.setup.t_vm, self.setup)
+            r.transition(State.CONTAINER_WARM, t0 - self.setup.t_setup
+                         + self.setup.t_vm + self.setup.t_cd, self.setup)
+            prov.active[r.id] = r
+            prov.reg_expire.add(t0 + pcfg.tau_vm, r.id)
+        self.lb_update(t0)
+
+        # event heap: (time, priority, kind, payload)
+        heap: List[Tuple[float, int, str, object]] = []
+        for i, (tm, c) in enumerate(zip(t_minutes, y_counts)):
+            base = float(tm) * 60.0
+            n = int(round(float(c)))
+            for j in range(n):
+                heapq.heappush(heap, (base + 60.0 * (j + 0.5) / max(n, 1),
+                                      2, "req", None))
+        t = t0
+        while t <= horizon_end:
+            heapq.heappush(heap, (t, 1, "monitor", None))
+            t += self.sim.monitor_tick_s
+        t = t0
+        while t <= horizon_end:
+            heapq.heappush(heap, (t, 0, "provision", None))
+            t += self.sim.provision_tick_s
+
+        pending: List[Request] = []
+        while heap:
+            now, _, kind, _ = heapq.heappop(heap)
+            if kind == "provision":
+                prov.tick(now)
+                self.replica_timeline.append(
+                    (now, len(self.serving_replicas(now)),
+                     len(self.replicas)))
+                # flush requests that were waiting for capacity
+                still = []
+                for req in pending:
+                    if not self._dispatch(req, now):
+                        still.append(req)
+                pending = still
+            elif kind == "monitor":
+                self._monitor_tick(now)
+            else:
+                req = Request(arrival=now, service=self.service.name,
+                              seq=self.service.request_seq,
+                              decode_tokens=self.service.decode_tokens)
+                if not self._dispatch(req, now):
+                    pending.append(req)
+            # drop guard: pending requests older than the drop bound count
+            # as failures rather than stalling the simulation forever
+            drop_bound = self.sim.max_queue_wait_factor \
+                * self.service.slo.latency_bound
+            fresh = [r for r in pending if now - r.arrival <= drop_bound]
+            self.dropped += len(pending) - len(fresh)
+            pending = fresh
+
+        self.dropped += len(pending)
+        lat = np.asarray([r.latency for r in self.finished])
+        bound = self.service.slo.latency_bound
+        # dropped requests are SLO violations, not statistical no-shows
+        n_total = len(lat) + self.dropped
+        req_ok = float(np.sum(lat <= bound)) / n_total if n_total else 1.0
+        saved = self.vertical.chip_seconds_saved(
+            horizon_end, self.replicas) if self.vertical else 0.0
+        return SimResult(
+            latencies=lat, slo_bound=bound,
+            request_compliance=req_ok,
+            window_compliance=self.monitor.compliance(),
+            total_cost_usd=self.ledger.total_usd,
+            chip_seconds=sum(
+                r.flavor.chips for r in self.replicas.values())
+            * (horizon_end - t0),
+            chip_seconds_saved=saved,
+            provision_history=prov.history,
+            replica_timeline=self.replica_timeline,
+            vertical_events=len(self.vertical.events) if self.vertical else 0,
+            hedged=self.lb.hedged,
+            dropped=self.dropped)
+
+    def _initial_flavor(self, profiles: Sequence[FlavorProfile]
+                        ) -> SliceFlavor:
+        from repro.core.estimator import resource_estimation
+        return resource_estimation(
+            1.0, self.service.slo.latency_bound, profiles).flavor

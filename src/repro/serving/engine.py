@@ -1,0 +1,163 @@
+"""Real JAX serving engine: prefill + autoregressive decode with a shared
+KV cache, group-batched requests.
+
+The paper assumes homogeneous requests (§III-A) — every query runs the same
+model with the same shape — so the engine batches request *groups*: up to
+``max_batch`` queued prompts are padded to a common length, prefilled in one
+program call, then decoded together.  Decode positions stay batch-uniform,
+which is exactly the homogeneity the decode cache layout exploits
+(repro.models.decode).  On CPU this serves the reduced configs for tests
+and examples; on a TPU slice the same class serves a production config —
+one engine instance per Container-Warm replica, with the slice's mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import decode as decode_lib
+from repro.models import model as model_lib
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefill_calls: int = 0
+    decode_calls: int = 0
+    requests: int = 0
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+
+
+class ServingEngine:
+    """One replica's data plane: owns the weights and the compiled
+    prefill/decode programs."""
+
+    def __init__(self, cfg: ModelConfig, params=None, mesh=None,
+                 max_batch: int = 8, max_len: int = 256, seed: int = 0):
+        assert cfg.supports_decode, \
+            f"{cfg.name} is encoder-only; use encode() instead"
+        self.cfg = cfg
+        self.mesh = mesh or jax.make_mesh(
+            (1, 1), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        self.max_batch = max_batch
+        self.max_len = max_len
+        moe_blocks = model_lib.moe_blocks_for(
+            cfg, int(np.prod(self.mesh.devices.shape)))
+        if params is None:
+            with jax.set_mesh(self.mesh):
+                params = model_lib.init_params(
+                    cfg, jax.random.key(seed), moe_blocks)
+        self.params = params
+        self.stats = EngineStats()
+
+        def _prefill(params, batch):
+            return decode_lib.prefill(cfg, params, batch, self.mesh,
+                                      max_len=max_len)
+
+        def _decode(params, token, cache):
+            return decode_lib.decode_step(cfg, params, token, cache,
+                                          self.mesh)
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode, donate_argnums=(2,))
+
+    # ------------------------------------------------------------------
+    def _pad_prompts(self, prompts: Sequence[np.ndarray]
+                     ) -> Tuple[jnp.ndarray, np.ndarray]:
+        """Left-align, right-pad to a common length (token 0)."""
+        B = len(prompts)
+        S = max(len(p) for p in prompts)
+        toks = np.zeros((B, S), np.int32)
+        lens = np.zeros((B,), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, :len(p)] = p
+            lens[i] = len(p)
+        return jnp.asarray(toks), lens
+
+    def serve_batch(self, prompts: Sequence[np.ndarray],
+                    decode_tokens: int = 16,
+                    extras: Optional[Dict[str, jnp.ndarray]] = None
+                    ) -> np.ndarray:
+        """Greedy-decode ``decode_tokens`` tokens for a group of prompts.
+        Returns [B, decode_tokens] int32.  Homogeneous-length prompts run
+        unpadded; ragged groups are padded to the group max."""
+        assert 0 < len(prompts) <= self.max_batch
+        toks, _ = self._pad_prompts(prompts)
+        batch = {"tokens": toks}
+        if extras:
+            batch.update(extras)
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, batch)
+        last = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        self.stats.prefill_calls += 1
+        self.stats.prefill_s += time.perf_counter() - t0
+
+        out = []
+        t0 = time.perf_counter()
+        for _ in range(decode_tokens):
+            out.append(last)
+            logits, cache = self._decode(self.params, last[:, None], cache)
+            last = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+            self.stats.decode_calls += 1
+        self.stats.decode_s += time.perf_counter() - t0
+        self.stats.requests += len(prompts)
+        return np.stack([np.asarray(t) for t in out], axis=1)
+
+    # ------------------------------------------------------------------
+    def run_queue(self, arrivals: Sequence[Tuple[float, np.ndarray]],
+                  decode_tokens: int = 16,
+                  extras_fn: Optional[Callable[[int], Dict]] = None
+                  ) -> List[Tuple[float, float]]:
+        """Group-batched serving loop over (arrival_time, prompt) pairs in
+        arrival order; returns (arrival, latency) per request.  Wall-clock
+        timing on the host — this is the real-engine analogue of the fleet
+        simulator's sampled service times."""
+        results: List[Tuple[float, float]] = []
+        i = 0
+        clock = 0.0
+        while i < len(arrivals):
+            # admit every request that has arrived by `clock`, cap max_batch
+            group = [arrivals[i]]
+            i += 1
+            clock = max(clock, group[0][0])
+            while (i < len(arrivals) and len(group) < self.max_batch
+                   and arrivals[i][0] <= clock):
+                group.append(arrivals[i])
+                i += 1
+            t0 = time.perf_counter()
+            extras = extras_fn(len(group)) if extras_fn else None
+            self.serve_batch([p for _, p in group], decode_tokens, extras)
+            dur = time.perf_counter() - t0
+            clock += dur
+            for arr, _ in group:
+                results.append((arr, clock - arr))
+        return results
+
+
+class EncoderEngine:
+    """Serving path for encoder-only archs (hubert): one forward per
+    request group, per-frame logits out."""
+
+    def __init__(self, cfg: ModelConfig, params=None, mesh=None,
+                 seed: int = 0):
+        assert cfg.is_encoder
+        self.cfg = cfg
+        self.mesh = mesh or jax.make_mesh(
+            (1, 1), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        if params is None:
+            with jax.set_mesh(self.mesh):
+                params = model_lib.init_params(cfg, jax.random.key(seed))
+        self.params = params
+        self._encode = jax.jit(
+            lambda p, b: decode_lib.prefill(cfg, p, b, self.mesh)[0])
+
+    def encode(self, frames: jnp.ndarray) -> jnp.ndarray:
+        return self._encode(self.params, {"frames": frames})

@@ -1,0 +1,57 @@
+"""Load balancers (paper §IV-A): round-robin at the frontend tier,
+least-loaded-connection at the backend tier, plus hedged requests as the
+serving-side straggler mitigation (DESIGN.md §5 — not in the paper; tail
+latency insurance for 1000+-replica fleets).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.lifecycle import Replica
+
+
+class RoundRobinLB:
+    """Frontend tier: stateless rotation over healthy frontends."""
+
+    def __init__(self) -> None:
+        self._i = 0
+
+    def pick(self, targets: Sequence[int]) -> Optional[int]:
+        if not targets:
+            return None
+        t = targets[self._i % len(targets)]
+        self._i += 1
+        return t
+
+
+@dataclasses.dataclass
+class LeastLoadedLB:
+    """Backend tier: route to the serving replica with the fewest open
+    connections (paper's 'least loaded connection' policy).
+
+    ``hedge_threshold``: if > 0, a request whose chosen backend already has
+    that many open connections is ALSO dispatched to the second-least-
+    loaded backend; the first finisher wins (the duplicate's work is the
+    hedging cost).  0 disables hedging (paper-faithful default).
+    """
+    hedge_threshold: int = 0
+    backends: List[Replica] = dataclasses.field(default_factory=list)
+    hedged: int = 0
+
+    def update(self, backends: Sequence[Replica]) -> None:
+        self.backends = list(backends)
+
+    def pick(self, now: float) -> Tuple[Optional[Replica], Optional[Replica]]:
+        """Returns (primary, hedge-or-None)."""
+        live = [r for r in self.backends if r.is_serving(now)]
+        if not live:
+            return None, None
+        live.sort(key=lambda r: (r.queue, r.busy_until))
+        primary = live[0]
+        hedge = None
+        if (self.hedge_threshold > 0 and len(live) > 1
+                and primary.queue >= self.hedge_threshold):
+            hedge = live[1]
+            self.hedged += 1
+        return primary, hedge

@@ -1,0 +1,4 @@
+from repro.train.optimizer import (  # noqa: F401
+    OptimizerConfig, OptState, adamw_update, init_opt_state, lr_schedule)
+from repro.train.train_step import (  # noqa: F401
+    TrainSettings, init_train_state, make_sharded_train_step, make_train_step)

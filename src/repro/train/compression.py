@@ -1,0 +1,52 @@
+"""int8 gradient compression with error feedback (distributed-optimization
+trick; optional, off by default).
+
+Gradients are quantized to int8 with a per-tensor scale before the cross-
+replica reduction; the quantization residual is carried in an error-feedback
+buffer so the bias vanishes over steps (1-bit/8-bit SGD style).  On the wire
+this cuts gradient all-reduce bytes 4x vs fp32 (2x vs bf16); under pjit we
+model it as quantize -> dequantize around the (XLA-inserted) reduction, which
+preserves exact arithmetic semantics of the deployed collective.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    amax = jnp.max(jnp.abs(g)).astype(jnp.float32)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_state(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads, err_state):
+    """Apply error feedback + int8 quantize/dequantize to a gradient pytree.
+
+    Returns (compressed_grads, new_err_state).  The returned grads are what
+    the optimizer actually consumes (post-wire).
+    """
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(g32)
+        deq = dequantize_int8(q, scale)
+        return deq, g32 - deq
+
+    out = jax.tree.map(one, grads, err_state)
+    comp = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda t: t[1], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return comp, err

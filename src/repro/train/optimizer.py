@@ -1,0 +1,91 @@
+"""AdamW in pure JAX (pytree-structured, fully shardable).
+
+The optimizer state mirrors the parameter tree, so the same logical-axis
+sharding rules apply (TRAIN_STORAGE_RULES ZeRO-shards both master params and
+moments over the data axis where divisible).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    mu: Any
+    nu: Any
+    step: jax.Array
+
+
+def init_opt_state(params) -> OptState:
+    z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    z2 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(mu=z, nu=z2, step=jnp.zeros((), jnp.int32))
+
+
+def abstract_opt_state(params) -> OptState:
+    z = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)
+    return OptState(mu=z, nu=jax.tree.map(lambda s: s, z),
+                    step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(sum(jax.tree.leaves(sq)))
+
+
+def adamw_update(cfg: OptimizerConfig, params, grads, state: OptState,
+                 ) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    """One AdamW step; params/grads fp32 pytrees; returns (params', state',
+    metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0   # no decay on norms
+        newp = p.astype(jnp.float32) * (1 - lr * wd) - lr * delta
+        return newp.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    params_new = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    mu_new = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    nu_new = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return params_new, OptState(mu_new, nu_new, step), {
+        "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,205 @@
+"""The jitted training step: mixed-precision forward/backward with FSDP-style
+per-layer parameter gathering, AdamW, optional int8 gradient compression.
+
+Storage layout (TRAIN_STORAGE_RULES): fp32 master params + Adam moments,
+TP-sharded on their model dims and ZeRO-sharded over 'data' on the 'embed'
+dim.  Inside the layer scan each layer's weights are cast to the compute
+dtype and constrained to COMPUTE_RULES, which makes XLA materialize exactly
+one layer's worth of bf16 weights at a time (all-gather over 'data'); the
+backward pass reduce-scatters gradients symmetrically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro import data as data_lib
+from repro.models import model as model_lib
+from repro.models.sharding import (
+    COMPUTE_RULES, TRAIN_STORAGE_RULES, logical_to_pspec, tree_pspecs)
+from repro.train import compression
+from repro.train.optimizer import (
+    OptimizerConfig, OptState, abstract_opt_state, adamw_update,
+    init_opt_state)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSettings:
+    optimizer: OptimizerConfig = OptimizerConfig()
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    fsdp: bool = True               # ZeRO-shard master/moments over 'data'
+    compress_grads: bool = False    # int8 + error feedback
+    microbatches: int = 1           # gradient-accumulation slices per step
+
+
+def storage_rules(settings: TrainSettings):
+    return TRAIN_STORAGE_RULES if settings.fsdp else COMPUTE_RULES
+
+
+def _drop_lead(axes_tree):
+    """Drop exactly one leading 'layers' axis name (the dim the outer scan
+    strips); hybrid trees keep their inner per-group dim."""
+    def one(ax):
+        if ax and ax[0] == "layers":
+            return tuple(ax[1:])
+        return tuple(ax)
+    return jax.tree.map(one, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            a is None or isinstance(a, str) for a in x))
+
+
+def loss_fn(cfg: ModelConfig, params, batch, mesh, settings: TrainSettings,
+            layer_axes):
+    dtype = jnp.dtype(settings.compute_dtype)
+
+    def layer_xform(layer_p):
+        # cast + constrain INSIDE the scan body: per-layer FSDP all-gather
+        def one(p, ax):
+            p = p.astype(dtype)
+            spec = logical_to_pspec(p.shape, ax, mesh, COMPUTE_RULES)
+            return jax.lax.with_sharding_constraint(
+                p, NamedSharding(mesh, spec))
+        return jax.tree.map(one, layer_p, layer_axes)
+
+    # non-scanned params (embed/head/norms/shared_attn) cast outside
+    casted = {k: (v if k == "layers"
+                  else jax.tree.map(lambda p: p.astype(dtype), v))
+              for k, v in params.items()}
+    loss, metrics = model_lib.forward(cfg, casted, batch, mesh,
+                                      remat=settings.remat,
+                                      layer_xform=layer_xform)
+    return loss, metrics
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh,
+                    settings: TrainSettings = TrainSettings(),
+                    moe_blocks: int = 0):
+    """Returns (step_fn, shardings) — step(params, opt, [err], batch)."""
+    axes = model_lib.param_axes(cfg, moe_blocks)
+    # inside the scan, each layer slice loses the leading stacking dims
+    layer_axes = _drop_lead(axes["layers"])
+
+    rules = storage_rules(settings)
+
+    def _grad_constrain(grads):
+        """Pin accumulated grads to the master-param (storage) sharding so
+        the accumulator never materializes an unsharded copy."""
+        def one(g, ax):
+            spec = logical_to_pspec(g.shape, ax, mesh, rules)
+            return jax.lax.with_sharding_constraint(
+                g, NamedSharding(mesh, spec))
+        return jax.tree.map(one, grads, axes)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, mesh, settings, layer_axes),
+            has_aux=True)(params)
+        return loss, metrics, grads
+
+    def step(params, opt_state, err_state, batch):
+        n = settings.microbatches
+        if n > 1:
+            # gradient accumulation: scan over microbatch slices; the fp32
+            # accumulator is storage-sharded so peak activation memory is
+            # one microbatch's worth
+            mbs = jax.tree.map(
+                lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]),
+                batch)
+
+            def mb_body(carry, mb):
+                gacc, lacc = carry
+                loss, metrics, grads = grads_of(params, mb)
+                gacc = _grad_constrain(jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / n, gacc, grads))
+                return (gacc, lacc + loss / n), metrics
+
+            gzero = _grad_constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            from repro.models import flags
+            (grads, loss), mstack = jax.lax.scan(
+                mb_body, (gzero, jnp.zeros((), jnp.float32)), mbs,
+                unroll=min(flags.scan_unroll(), n))
+            metrics = jax.tree.map(lambda m: m.mean(), mstack)
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+        if settings.compress_grads:
+            grads, err_state = compression.compress_grads(grads, err_state)
+        params, opt_state, opt_metrics = adamw_update(
+            settings.optimizer, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, err_state, metrics
+
+    return step, axes
+
+
+def make_sharded_train_step(cfg: ModelConfig, mesh: Mesh,
+                            settings: TrainSettings = TrainSettings(),
+                            moe_blocks: int = 0, donate: bool = True):
+    """jit-wrapped step with explicit in/out shardings for the dry-run and
+    the real trainer.  Returns (jitted_step, specs) where specs contains the
+    param/opt/batch PartitionSpecs."""
+    step, axes = make_train_step(cfg, mesh, settings, moe_blocks)
+    rules = storage_rules(settings)
+    p_struct = model_lib.abstract_param_tree(cfg, moe_blocks, jnp.float32)
+    p_specs = tree_pspecs(p_struct, axes, mesh, rules)
+    o_struct = abstract_opt_state(p_struct)
+    o_specs = OptState(mu=p_specs, nu=p_specs, step=P())
+    e_struct = p_struct if settings.compress_grads else None
+    e_specs = p_specs if settings.compress_grads else None
+
+    b_axes = data_lib.batch_axes_tree(cfg)
+    b_struct = None  # provided at lower() time
+
+    def batch_specs(batch_struct):
+        return jax.tree.map(
+            lambda s, ax: logical_to_pspec(s.shape, ax, mesh, rules),
+            batch_struct, b_axes)
+
+    def to_shard(tree_specs):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    def wrapped(params, opt_state, err_state, batch):
+        return step(params, opt_state, err_state, batch)
+
+    specs = {
+        "params": p_specs, "opt": o_specs, "err": e_specs,
+        "param_struct": p_struct, "opt_struct": o_struct,
+        "err_struct": e_struct, "batch_specs": batch_specs,
+        "to_shard": to_shard, "axes": axes,
+    }
+
+    jitted = jax.jit(
+        wrapped,
+        donate_argnums=(0, 1, 2) if donate else (),
+    )
+    return jitted, specs
+
+
+def init_train_state(cfg: ModelConfig, mesh: Mesh, key,
+                     settings: TrainSettings = TrainSettings(),
+                     moe_blocks: int = 0):
+    """Concrete (params fp32, opt, err) initialized with storage shardings."""
+    step, axes = make_train_step(cfg, mesh, settings, moe_blocks)
+    rules = storage_rules(settings)
+    p_struct = model_lib.abstract_param_tree(cfg, moe_blocks, jnp.float32)
+    p_specs = tree_pspecs(p_struct, axes, mesh, rules)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                             is_leaf=lambda x: isinstance(x, P))
+
+    @functools.partial(jax.jit, out_shardings=shardings)
+    def _init(key):
+        return model_lib.init_params(cfg, key, moe_blocks, dtype="float32")
+
+    params = _init(key)
+    opt = init_opt_state(params)
+    err = compression.init_error_state(params) if settings.compress_grads \
+        else None
+    return params, opt, err

@@ -1,0 +1,107 @@
+"""Synthetic workload traces statistically matched to the paper's datasets.
+
+The paper used (1) NYC taxi pickups per minute (speech-recognition workload
+for a ride-hailing app) and (2) NY Thruway toll entries per minute (license-
+plate recognition).  Neither dataset ships offline, so we generate traces
+with the same structure the paper's forecaster exploits:
+  logistic trend + daily & weekly seasonality + holiday effects
+  + bursty, heteroscedastic noise + occasional surges (taxi)       [Eq. 2]
+  commuter double-peak weekday pattern + weekend damping (toll)
+10k points at 1-minute resolution; 6000/500/2500 train/val/test as in §V-C.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+MIN_PER_DAY = 1440.0
+MIN_PER_WEEK = 10080.0
+
+
+@dataclasses.dataclass
+class Trace:
+    t: np.ndarray           # minutes
+    y: np.ndarray           # requests per minute (integer counts)
+    name: str
+    holidays: List[Tuple[float, float]]
+
+    def split(self, train: int = 6000, val: int = 500):
+        i1, i2 = train, train + val
+        return ((self.t[:i1], self.y[:i1]),
+                (self.t[i1:i2], self.y[i1:i2]),
+                (self.t[i2:], self.y[i2:]))
+
+
+def _base_seasonal(t, day_phase, day_amp, week_amp):
+    daily = day_amp * (
+        np.sin(2 * np.pi * (t / MIN_PER_DAY - day_phase))
+        + 0.4 * np.sin(4 * np.pi * (t / MIN_PER_DAY - day_phase) + 0.7)
+        + 0.2 * np.sin(6 * np.pi * (t / MIN_PER_DAY - day_phase) + 1.9))
+    weekly = week_amp * np.sin(2 * np.pi * t / MIN_PER_WEEK + 0.5)
+    return daily + weekly
+
+
+def taxi_like(n: int = 10_000, seed: int = 0, base: float = 300.0) -> Trace:
+    """Ride-hailing speech queries: evening-heavy diurnal cycle, weekend
+    surge nights, logistic adoption growth, bursty spikes."""
+    rng = np.random.default_rng(seed)
+    t = np.arange(n, dtype=np.float64)
+    trend = base * (0.7 + 0.6 / (1 + np.exp(-(t - n / 2) / (n / 6))))
+    seas = _base_seasonal(t, day_phase=0.80, day_amp=0.45 * base,
+                          week_amp=0.12 * base)
+    # Friday/Saturday night surge (weekly position within [0,1))
+    wpos = (t % MIN_PER_WEEK) / MIN_PER_WEEK
+    surge = 0.35 * base * np.exp(-0.5 * ((wpos - 0.75) / 0.035) ** 2)
+    surge += 0.30 * base * np.exp(-0.5 * ((wpos - 0.89) / 0.035) ** 2)
+    holidays = [(2 * MIN_PER_DAY + 600, 2 * MIN_PER_DAY + 1200),
+                (5.5 * MIN_PER_DAY, 6.0 * MIN_PER_DAY)]
+    hol = np.zeros(n)
+    for a, b in holidays:
+        hol += 0.5 * base * ((t >= a) & (t < b))
+    lam = np.maximum(trend + seas + surge + hol, 0.15 * base)
+    # bursty noise: Poisson + persistent AR(1) jitter + decaying burst events
+    ar = np.zeros(n)
+    for i in range(1, n):
+        ar[i] = 0.93 * ar[i - 1] + rng.normal(0, 0.06)
+    impulse = (rng.random(n) < 0.0015) * rng.uniform(0.5, 1.5, n)
+    kernel = np.exp(-np.arange(20) / 6.0)          # ~10-minute decaying burst
+    bursts = np.convolve(impulse, kernel)[:n]
+    lam = lam * np.exp(ar) * (1 + bursts)
+    y = rng.poisson(lam).astype(np.float64)
+    return Trace(t, y, "taxi_like", holidays)
+
+
+def toll_like(n: int = 10_000, seed: int = 1, base: float = 180.0) -> Trace:
+    """Toll-plaza plate recognition: commuter double peak on weekdays,
+    damped weekends, slow linear growth."""
+    rng = np.random.default_rng(seed)
+    t = np.arange(n, dtype=np.float64)
+    trend = base * (0.9 + 0.1 * t / n)
+    dpos = (t % MIN_PER_DAY) / MIN_PER_DAY
+    morning = np.exp(-0.5 * ((dpos - 0.33) / 0.045) ** 2)   # ~8am
+    evening = np.exp(-0.5 * ((dpos - 0.72) / 0.055) ** 2)   # ~5pm
+    weekday = ((t % MIN_PER_WEEK) < 5 * MIN_PER_DAY)
+    damp = np.where(weekday, 1.0, 0.45)
+    seas = base * (0.9 * morning + 1.1 * evening) * damp
+    night = 0.25 * base * (1 - np.exp(-0.5 * ((dpos - 0.5) / 0.25) ** 2))
+    holidays = [(4 * MIN_PER_DAY, 5 * MIN_PER_DAY)]
+    hol = np.zeros(n)
+    for a, b in holidays:
+        hol -= 0.4 * base * ((t >= a) & (t < b))     # holiday = less traffic
+    lam = np.maximum(trend * 0.4 + seas + night * base / 90 + hol,
+                     0.12 * base)
+    ar = np.zeros(n)
+    for i in range(1, n):
+        ar[i] = 0.9 * ar[i - 1] + rng.normal(0, 0.05)
+    y = rng.poisson(lam * np.exp(ar)).astype(np.float64)
+    return Trace(t, y, "toll_like", holidays)
+
+
+def get_trace(name: str, n: int = 10_000, seed: Optional[int] = None) -> Trace:
+    if name in ("taxi", "taxi_like", "dataset1"):
+        return taxi_like(n, seed if seed is not None else 0)
+    if name in ("toll", "toll_like", "dataset2"):
+        return toll_like(n, seed if seed is not None else 1)
+    raise KeyError(name)

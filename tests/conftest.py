@@ -1,0 +1,8 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: device count is intentionally NOT forced here — smoke tests and
+# benches must see the real single CPU device.  Multi-device tests spawn
+# subprocesses with their own XLA_FLAGS (tests/test_distributed.py).

@@ -1,0 +1,99 @@
+"""Checkpointing: roundtrip fidelity, atomic commits under simulated
+crashes, async save, garbage collection, restart continuation."""
+import json
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import checkpoint as ck
+
+
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(rng.standard_normal((8, 16)), jnp.float32),
+                   "layers": {"ln": jnp.ones((4,), jnp.bfloat16)}},
+        "opt": {"mu": jnp.zeros((8, 16)), "step": jnp.asarray(7, jnp.int32)},
+        "none_leaf": None,
+    }
+
+
+def test_roundtrip_exact(tmp_path):
+    s = _state()
+    ck.save(str(tmp_path), 10, s, {"mesh": "1,1"})
+    out, meta = ck.restore(str(tmp_path), 10, s)
+    assert meta["mesh"] == "1,1"
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert out["none_leaf"] is None
+
+
+def test_restore_latest_and_gc(tmp_path):
+    s = _state()
+    for step in (10, 20, 30, 40):
+        ck.save(str(tmp_path), step, s, keep=2)
+    assert ck.list_steps(str(tmp_path)) == [30, 40]
+    step, _, _ = ck.restore_latest(str(tmp_path), s)
+    assert step == 40
+
+
+def test_crash_mid_save_leaves_previous_intact(tmp_path):
+    s = _state()
+    ck.save(str(tmp_path), 10, s)
+    # simulate a crash: a temp dir exists but was never renamed
+    fake_tmp = tmp_path / ".tmp_save_crashed"
+    fake_tmp.mkdir()
+    (fake_tmp / "shard_0000.npz").write_bytes(b"garbage")
+    found = ck.restore_latest(str(tmp_path), s)
+    assert found is not None and found[0] == 10
+
+
+def test_corrupt_manifest_is_skipped(tmp_path):
+    s = _state()
+    ck.save(str(tmp_path), 10, s)
+    bad = tmp_path / "step_00000020"
+    bad.mkdir()
+    # no manifest.json -> not listed
+    assert ck.list_steps(str(tmp_path)) == [10]
+
+
+def test_dtype_cast_on_restore(tmp_path):
+    s = {"w": jnp.asarray(np.arange(6, dtype=np.float32))}
+    ck.save(str(tmp_path), 1, s)
+    template = {"w": jax.ShapeDtypeStruct((6,), jnp.bfloat16)}
+    out, _ = ck.restore(str(tmp_path), 1, template)
+    assert out["w"].dtype == jnp.bfloat16
+
+
+def test_async_checkpointer_commits(tmp_path):
+    s = _state()
+    acp = ck.AsyncCheckpointer(str(tmp_path), keep=2)
+    acp.save(5, s, {"k": 1})
+    acp.wait()
+    assert acp.last_committed == 5
+    step, out, meta = ck.restore_latest(str(tmp_path), s)
+    assert step == 5 and meta["k"] == 1
+
+
+def test_train_restart_reproduces_exact_losses(tmp_path):
+    """Integration: fail at step 12, restart, verify the overlapping steps
+    produce identical losses (deterministic data + state restore)."""
+    from repro.launch.train import train
+    d = str(tmp_path / "ck")
+    full_params, _, full_losses = train(
+        "smollm-135m", reduced=True, steps=16, batch=2, seq=32,
+        ckpt_dir=None, log_every=100)
+    # run A: checkpoint every 8, die at 12
+    with pytest.raises(SystemExit):
+        train("smollm-135m", reduced=True, steps=16, batch=2, seq=32,
+              ckpt_dir=d, ckpt_every=8, fail_at=12, log_every=100)
+    # run B: resumes from step 8, finishes
+    _, _, losses_b = train(
+        "smollm-135m", reduced=True, steps=16, batch=2, seq=32,
+        ckpt_dir=d, ckpt_every=8, log_every=100)
+    np.testing.assert_allclose(losses_b, full_losses[8:], rtol=1e-5)

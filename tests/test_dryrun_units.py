@@ -1,0 +1,117 @@
+"""Dry-run machinery units (no 512-device compile here — the sweep itself
+is the integration test): cell enumeration, input specs, roofline math,
+HLO collective parsing, head-padding adaptation."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_IDS, SHAPES, all_cells, cell_is_runnable,
+                           get_config, get_shape)
+from repro.launch.adapt import pad_heads_for_tp
+from repro.roofline import analysis as ra
+
+
+def test_cell_enumeration_40_cells_with_expected_skips():
+    cells = list(all_cells())
+    assert len(cells) == 40
+    skips = {(a, s.name) for a, s, ok, _ in cells if not ok}
+    expected = {
+        ("hubert-xlarge", "decode_32k"), ("hubert-xlarge", "long_500k"),
+        ("qwen3-4b", "long_500k"), ("llama3-8b", "long_500k"),
+        ("smollm-135m", "long_500k"), ("phi3-medium-14b", "long_500k"),
+        ("deepseek-moe-16b", "long_500k"), ("internvl2-26b", "long_500k"),
+    }
+    assert skips == expected
+
+
+def test_long_context_runs_for_subquadratic_families():
+    for arch in ("mamba2-370m", "zamba2-2.7b", "mixtral-8x22b"):
+        ok, _ = cell_is_runnable(get_config(arch), get_shape("long_500k"))
+        assert ok, arch
+
+
+def test_head_padding_preserves_ratio_and_dim():
+    cfg = get_config("phi3-medium-14b")          # 40H / 10KV
+    out = pad_heads_for_tp(cfg, 16)
+    assert out.n_kv_heads == 16 and out.n_heads == 64
+    assert out.head_dim == cfg.head_dim          # override keeps 128
+    assert out.n_heads % 16 == 0
+    # divisible configs pass through untouched
+    assert pad_heads_for_tp(get_config("llama3-8b"), 16) \
+        == get_config("llama3-8b")
+
+
+def test_collective_parse_from_hlo_text():
+    txt = """
+  %ar = f32[128,256]{1,0} all-reduce(f32[128,256]{1,0} %p), replica_groups=[16,16]<=[256], to_apply=%add
+  %ag = bf16[64]{0} all-gather(bf16[4]{0} %q), replica_groups=[16,16]<=[256], dimensions={0}
+  %rs = f32[8]{0} reduce-scatter(f32[128]{0} %r), replica_groups={{0,1,2,3}}, to_apply=%add
+"""
+    coll = ra.collective_bytes(txt)
+    n = 16
+    assert coll["all-reduce"] == pytest.approx(
+        128 * 256 * 4 * 2 * (n - 1) / n)
+    assert coll["all-gather"] == pytest.approx(64 * 2 * (n - 1) / n)
+    assert coll["reduce-scatter"] == pytest.approx(8 * 4 * 3)
+
+
+def test_roofline_terms_and_dominance():
+    cost = ra.ProgramCost(flops=197e12, bytes_accessed=819e9 * 2,
+                          wire_bytes=50e9 * 0.5,
+                          by_collective={"all-reduce": 50e9 * 0.5})
+    rl = ra.make_roofline(cost, chips=256, model_flops=197e12 * 256 * 0.5)
+    assert rl.compute_s == pytest.approx(1.0)
+    assert rl.memory_s == pytest.approx(2.0)
+    assert rl.collective_s == pytest.approx(0.5)
+    assert rl.dominant == "memory"
+    assert rl.bound_s == pytest.approx(2.0)
+    assert rl.roofline_frac == pytest.approx(0.25)
+
+
+def test_probe_extrapolation_is_linear():
+    def cost(layers):
+        return ra.ProgramCost(100 + 10 * layers, 200 + 20 * layers,
+                              5 + 2 * layers, {"all-reduce": 5 + 2 * layers})
+    total = ra.extrapolate(cost(1), cost(2), 1, 2, 48)
+    assert total.flops == pytest.approx(100 + 480)
+    assert total.bytes_accessed == pytest.approx(200 + 960)
+    assert total.wire_bytes == pytest.approx(5 + 96)
+
+
+def test_model_flops_estimate_moe_uses_active_params():
+    dense = get_config("llama3-8b")
+    moe = get_config("mixtral-8x22b")
+    shape = get_shape("train_4k")
+    assert moe.active_param_count() < 0.35 * moe.param_count()
+    f_dense = ra.model_flops_estimate(dense, shape)
+    toks = shape.global_batch * shape.seq_len
+    assert f_dense == pytest.approx(6.0 * dense.active_param_count() * toks)
+
+
+def test_input_specs_shapes_no_allocation():
+    import os
+    if len(jax.devices()) < 2:
+        # input_specs attaches shardings for an existing mesh; on one
+        # device use a trivial mesh
+        mesh = jax.make_mesh((1, 1), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.dryrun import input_specs
+    cfg = get_config("qwen3-4b")
+    shape = get_shape("train_4k")
+    specs = input_specs(cfg, shape, mesh, "train")
+    assert specs["tokens"].shape == (256, 4096)
+    assert specs["tokens"].dtype == jnp.int32
+    assert isinstance(specs["tokens"], jax.ShapeDtypeStruct)
+    d = input_specs(cfg, get_shape("decode_32k"), mesh, "decode")
+    assert d["token"].shape == (128, 1)
+    assert d["cache"]["k"].shape == (36, 128, 8, 32768, 80)  # qwen3 hd=80
+
+
+def test_train_microbatch_table_covers_big_archs():
+    from repro.launch.dryrun import TRAIN_MICROBATCH, train_settings_for
+    assert train_settings_for("mixtral-8x22b").microbatches >= 4
+    assert train_settings_for("qwen3-4b").microbatches == 1
+    for arch in TRAIN_MICROBATCH:
+        assert arch in ARCH_IDS

@@ -1,0 +1,99 @@
+"""Real-engine serving path on CPU with reduced configs."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.configs import get_reduced_config
+from repro.serving.batching import Request, RequestQueue
+from repro.serving.engine import EncoderEngine, ServingEngine
+from repro.serving.load_balancer import LeastLoadedLB, RoundRobinLB
+from repro.core.lifecycle import Replica, State
+from repro.core.cost import get_flavor
+
+RNG = np.random.default_rng(0)
+
+
+def test_serve_batch_shapes_and_determinism():
+    cfg = get_reduced_config("smollm-135m")
+    eng = ServingEngine(cfg, max_batch=4, max_len=64)
+    prompts = [RNG.integers(1, cfg.vocab, 24) for _ in range(3)]
+    out1 = eng.serve_batch(prompts, decode_tokens=6)
+    out2 = eng.serve_batch(prompts, decode_tokens=6)
+    assert out1.shape == (3, 6)
+    np.testing.assert_array_equal(out1, out2)   # greedy = deterministic
+    assert eng.stats.requests == 6
+
+
+def test_ragged_prompts_padded():
+    cfg = get_reduced_config("smollm-135m")
+    eng = ServingEngine(cfg, max_batch=4, max_len=64)
+    prompts = [RNG.integers(1, cfg.vocab, n) for n in (8, 16, 12)]
+    out = eng.serve_batch(prompts, decode_tokens=4)
+    assert out.shape == (3, 4)
+
+
+def test_run_queue_latency_accounting():
+    cfg = get_reduced_config("smollm-135m")
+    eng = ServingEngine(cfg, max_batch=4, max_len=48)
+    arrivals = [(0.0, RNG.integers(1, cfg.vocab, 16)) for _ in range(6)]
+    res = eng.run_queue(arrivals, decode_tokens=2)
+    assert len(res) == 6
+    assert all(l > 0 for _, l in res)
+    # group batching: 6 simultaneous requests with max_batch=4 -> 2 groups
+    assert eng.stats.prefill_calls == 2
+
+
+def test_encoder_engine():
+    cfg = get_reduced_config("hubert-xlarge")
+    eng = EncoderEngine(cfg)
+    frames = jnp.asarray(RNG.standard_normal((2, 32, cfg.d_model)),
+                         jnp.bfloat16)
+    logits = eng.encode(frames)
+    assert logits.shape == (2, 32, cfg.padded_vocab)
+
+
+def test_engine_rejects_encoder_arch():
+    with pytest.raises(AssertionError):
+        ServingEngine(get_reduced_config("hubert-xlarge"))
+
+
+def test_request_queue_bounds():
+    q = RequestQueue(max_pending=2)
+    assert q.push(Request(0.0, "s"))
+    assert q.push(Request(0.0, "s"))
+    assert not q.push(Request(0.0, "s"))
+    assert q.dropped == 1
+    assert len(q.pop_batch(5)) == 2
+
+
+def test_round_robin_lb_cycles():
+    lb = RoundRobinLB()
+    picks = [lb.pick([1, 2, 3]) for _ in range(6)]
+    assert picks == [1, 2, 3, 1, 2, 3]
+    assert lb.pick([]) is None
+
+
+def _serving(n, queue=0):
+    r = Replica(flavor=get_flavor("v5e-1"), service="s")
+    r.state = State.CONTAINER_WARM
+    r.ready_at = 0.0
+    r.queue = queue
+    return r
+
+
+def test_least_loaded_lb_picks_emptiest():
+    lb = LeastLoadedLB()
+    a, b = _serving(1, queue=3), _serving(2, queue=1)
+    lb.update([a, b])
+    primary, hedge = lb.pick(now=1.0)
+    assert primary is b and hedge is None
+
+
+def test_hedging_fires_on_loaded_primary():
+    lb = LeastLoadedLB(hedge_threshold=2)
+    a, b = _serving(1, queue=2), _serving(2, queue=5)
+    lb.update([a, b])
+    primary, hedge = lb.pick(now=1.0)
+    assert primary is a and hedge is b
+    assert lb.hedged == 1

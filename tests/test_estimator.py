@@ -1,0 +1,115 @@
+"""Algorithm 1 properties — including the paper's Eq. 7 additive-optimality
+bound, verified against the exact DP oracle with hypothesis."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost import FLAVORS, SliceFlavor
+from repro.core.estimator import (FlavorProfile, dp_optimal_cost,
+                                  naive_estimation, resource_estimation)
+
+
+def _profiles(t95s, feasible=None):
+    feasible = feasible or [True] * len(t95s)
+    return [FlavorProfile(f, t, ok)
+            for f, t, ok in zip(FLAVORS, t95s, feasible)]
+
+
+def test_algorithm1_picks_min_cost_per_request():
+    # t_p95 halves with chips but cost more than doubles -> smallest wins
+    profs = _profiles([0.4, 0.2, 0.1, 0.05, 0.025])
+    est = resource_estimation(100, 2.0, profs)
+    cprs = [p.flavor.cost_per_hour / p.n_req(2.0) for p in profs]
+    assert est.cpr == min(cprs)
+
+
+def test_algorithm1_respects_min_mem():
+    profs = _profiles([0.1] * 5, feasible=[False, False, True, True, True])
+    est = resource_estimation(10, 2.0, profs)
+    assert est.flavor.chips >= 4
+
+
+def test_algorithm1_tie_break_prefers_cheaper():
+    fa = SliceFlavor("a", 1, 16, 10.0)
+    fb = SliceFlavor("b", 2, 32, 5.0)
+    # identical cpr = 1.0: a serves 10, b serves 5
+    profs = [FlavorProfile(fa, 2.0 / 10, True),
+             FlavorProfile(fb, 2.0 / 5, True)]
+    est = resource_estimation(20, 2.0, profs)
+    assert est.flavor.name == "b" and est.flavor.cost_per_hour == 5.0
+
+
+def test_algorithm1_alpha_ceil():
+    profs = _profiles([0.4, 0.2, 0.1, 0.05, 0.025])
+    est = resource_estimation(100, 2.0, profs)
+    assert est.alpha == math.ceil(100 / est.n_req)
+    assert est.alpha * est.n_req >= 100
+
+
+def test_algorithm1_no_feasible_flavor_raises():
+    profs = _profiles([10.0] * 5)     # nothing fits in lambda=2s
+    with pytest.raises(ValueError):
+        resource_estimation(10, 2.0, profs)
+
+
+def test_naive_biggest_never_cheaper_than_greedy():
+    profs = _profiles([0.4, 0.25, 0.16, 0.11, 0.08])
+    for y in (1, 7, 40, 300, 1234):
+        g = resource_estimation(y, 2.0, profs)
+        n = naive_estimation(y, 2.0, profs, "biggest")
+        assert g.total_cost <= n.total_cost + 1e-9
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    t95s=st.lists(st.floats(0.01, 1.5), min_size=5, max_size=5),
+    y=st.integers(0, 2000),
+    lam=st.floats(0.5, 5.0))
+def test_eq7_additive_bound_vs_rational_lower_bound(t95s, y, lam):
+    """Paper Eq. 7: greedy total_cost < rational lower bound + cost_{i*}."""
+    profs = _profiles(t95s)
+    try:
+        est = resource_estimation(y, lam, profs)
+    except ValueError:
+        return   # no flavor can serve within lambda — estimator refuses
+    assert est.total_cost <= est.rational_lower_bound \
+        + est.flavor.cost_per_hour + 1e-9
+    assert est.total_cost >= est.rational_lower_bound - 1e-9
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    t95s=st.lists(st.floats(0.02, 1.0), min_size=5, max_size=5),
+    y=st.integers(1, 400))
+def test_greedy_within_one_flavor_cost_of_integral_optimum(t95s, y):
+    """Stronger check than Eq. 7: compare against the exact DP optimum."""
+    profs = _profiles(t95s)
+    lam = 2.0
+    try:
+        est = resource_estimation(y, lam, profs)
+    except ValueError:
+        return
+    opt = dp_optimal_cost(y, lam, profs)
+    assert opt <= est.total_cost + 1e-9           # DP is a true optimum
+    assert est.total_cost <= opt + est.flavor.cost_per_hour + 1e-9
+
+
+@settings(max_examples=100, deadline=None)
+@given(y1=st.integers(0, 500), y2=st.integers(0, 500))
+def test_alpha_monotone_in_forecast(y1, y2):
+    profs = _profiles([0.4, 0.2, 0.1, 0.05, 0.025])
+    lo, hi = min(y1, y2), max(y1, y2)
+    a_lo = resource_estimation(lo, 2.0, profs).alpha
+    a_hi = resource_estimation(hi, 2.0, profs).alpha
+    assert a_lo <= a_hi
+
+
+def test_scaled_keeps_flavor_fixed():
+    """Alg 2 recomputes alpha per tick but never switches flavor."""
+    profs = _profiles([0.4, 0.2, 0.1, 0.05, 0.025])
+    est = resource_estimation(100, 2.0, profs)
+    est2 = est.scaled(500)
+    assert est2.flavor == est.flavor and est2.n_req == est.n_req
+    assert est2.alpha == math.ceil(500 / est.n_req)

@@ -1,0 +1,95 @@
+"""Forecaster tests: Prophet component recovers seasonal structure, the
+compensator improves accuracy (the paper's 37-46% claim is validated at
+full scale in benchmarks/fig7_10_forecasting.py — here we assert the
+direction on a fast reduced setup), online error feedback works."""
+import numpy as np
+import pytest
+
+from repro.core.forecast import (BaristaForecaster, ForecasterConfig,
+                                 Prophet, ProphetConfig, build_features)
+from repro.workload.generator import taxi_like, toll_like
+
+FAST = ProphetConfig(fourier_order=6, steps=400)
+
+
+def _ape95(pred, y):
+    ape = np.abs(pred - y) / np.maximum(np.abs(y), 1.0)
+    return float(np.percentile(ape, 95))
+
+
+def test_prophet_fits_pure_seasonal_signal():
+    t = np.arange(3000, dtype=np.float64)
+    y = 100 + 30 * np.sin(2 * np.pi * t / 1440.0) \
+        + 10 * np.sin(2 * np.pi * t / 10080.0)
+    p = Prophet(FAST).fit(t[:2500], y[:2500])
+    yhat, lo, up = p.predict(t[2500:])
+    assert _ape95(yhat, y[2500:]) < 0.10
+    assert np.all(lo <= up)
+
+
+def test_prophet_logistic_trend_saturates():
+    t = np.arange(4000, dtype=np.float64)
+    y = 200.0 / (1 + np.exp(-(t - 2000) / 400.0)) + 50.0
+    p = Prophet(ProphetConfig(fourier_order=3, steps=600)).fit(t, y)
+    yhat, _, _ = p.predict(t[-500:])
+    assert _ape95(yhat, y[-500:]) < 0.15
+
+
+def test_holiday_effect_is_learned():
+    t = np.arange(3000, dtype=np.float64)
+    base = 100 + 20 * np.sin(2 * np.pi * t / 1440.0)
+    hol_window = (1000.0, 1400.0)
+    y = base + 80.0 * ((t >= hol_window[0]) & (t < hol_window[1]))
+    with_h = Prophet(FAST, holidays=[hol_window]).fit(t, y)
+    without = Prophet(FAST).fit(t, y)
+    sl = slice(1000, 1400)
+    yh, _, _ = with_h.predict(t)
+    yn, _, _ = without.predict(t)
+    err_with = np.abs(yh[sl] - y[sl]).mean()
+    err_without = np.abs(yn[sl] - y[sl]).mean()
+    assert err_with < err_without
+
+
+@pytest.mark.parametrize("trace_fn", [taxi_like, toll_like])
+def test_compensator_improves_over_prophet(trace_fn):
+    tr = trace_fn(n=4000)
+    cfg = ForecasterConfig(window=2500, prophet=FAST,
+                           compensator_train=800, compensator_val=150)
+    fc_b = BaristaForecaster(cfg, holidays=tr.holidays, use_compensator=True)
+    fc_p = BaristaForecaster(cfg, holidays=tr.holidays, use_compensator=False)
+    t_tr, y_tr = tr.t[:3000], tr.y[:3000]
+    t_te, y_te = tr.t[3000:], tr.y[3000:]
+    fc_b.warm_start(t_tr, y_tr, horizon=2)
+    fc_p.warm_start(t_tr, y_tr, horizon=2)
+    pred_b = fc_b.rolling_eval(t_te, y_te, horizon=2)
+    pred_p = fc_p.rolling_eval(t_te, y_te, horizon=2)
+    mae_b = np.abs(pred_b - y_te).mean()
+    mae_p = np.abs(pred_p - y_te).mean()
+    assert mae_b < mae_p, (mae_b, mae_p)
+
+
+def test_online_observe_updates_errors_and_refits():
+    tr = taxi_like(n=2600)
+    cfg = ForecasterConfig(window=2000, refit_every=120, prophet=FAST,
+                           compensator_train=600, compensator_val=100)
+    fc = BaristaForecaster(cfg, holidays=tr.holidays)
+    fc.warm_start(tr.t[:2400], tr.y[:2400], horizon=1)
+    fit_t0 = fc._last_fit_t
+    for i in range(2400, 2600):
+        y_hat, lo, up = fc.forecast(tr.t[i])
+        assert y_hat >= 0 and lo <= up
+        fc.observe(tr.t[i], tr.y[i])
+    assert fc._last_fit_t > fit_t0          # rolling refit happened
+    errs = np.asarray(fc._errors)
+    assert np.any(errs != 0.0)              # error feedback materialized
+
+
+def test_build_features_layout():
+    yhat = np.array([1.0, 2.0])
+    lo = np.array([0.5, 1.5])
+    up = np.array([1.5, 2.5])
+    errs = np.arange(10, dtype=np.float64).reshape(2, 5)
+    X = build_features(yhat, lo, up, errs)
+    assert X.shape == (2, 8)
+    np.testing.assert_array_equal(X[:, 0], yhat)
+    np.testing.assert_array_equal(X[:, 3:], errs)

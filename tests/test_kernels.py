@@ -1,0 +1,216 @@
+"""Per-kernel validation: shape/dtype sweeps against the pure-jnp oracles
+(interpret mode executes the kernel body on CPU)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import (decode_attention, decode_attention_partial,
+                           decode_attention_ref, flash_attention,
+                           flash_attention_bshd, flash_attention_ref,
+                           ssd_scan, ssd_scan_ref)
+from repro.models import ssm as ssm_lib
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape, dtype, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # B, H, Hkv, Sq, Sk, hd, causal, window
+    (2, 4, 2, 128, 128, 64, True, 0),
+    (1, 8, 2, 64, 256, 32, True, 0),       # GQA + query suffix (Sq < Sk)
+    (2, 4, 4, 96, 96, 16, True, 32),       # sliding window
+    (1, 2, 1, 128, 128, 64, False, 0),     # bidirectional (encoder)
+    (1, 3, 3, 80, 80, 24, True, 0),        # odd head count / non-pow2 dims
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(case, dtype):
+    B, H, Hkv, Sq, Sk, hd, causal, window = case
+    q = _rand((B, H, Sq, hd), dtype)
+    k = _rand((B, Hkv, Sk, hd), dtype)
+    v = _rand((B, Hkv, Sk, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_block_invariance():
+    """Different tilings must give identical results."""
+    q = _rand((1, 2, 256, 32), jnp.float32)
+    k = _rand((1, 2, 256, 32), jnp.float32)
+    v = _rand((1, 2, 256, 32), jnp.float32)
+    outs = [flash_attention(q, k, v, causal=True,
+                            q_block=bq, kv_block=bk)
+            for bq, bk in [(32, 64), (128, 128), (256, 32)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_flash_attention_bshd_layout():
+    q = _rand((2, 64, 4, 16), jnp.float32)   # [B,S,H,hd]
+    k = _rand((2, 64, 2, 16), jnp.float32)
+    v = _rand((2, 64, 2, 16), jnp.float32)
+    out = flash_attention_bshd(q, k, v, causal=True)
+    ref = flash_attention_ref(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                              v.swapaxes(1, 2), causal=True).swapaxes(1, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+DECODE_CASES = [
+    (2, 8, 2, 512, 64),
+    (1, 4, 4, 1024, 32),
+    (3, 6, 3, 256, 16),
+    (1, 16, 2, 128, 128),
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_matches_ref(case, dtype):
+    B, H, Hkv, S, hd = case
+    q = _rand((B, H, hd), dtype)
+    k = _rand((B, Hkv, S, hd), dtype)
+    v = _rand((B, Hkv, S, hd), dtype)
+    valid = jnp.asarray(RNG.random((B, S)) < 0.7)
+    o, m, l = decode_attention_partial(q, k, v, valid)
+    ro, rm, rl = decode_attention_ref(q, k, v, valid)
+    tol = 2e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(o), np.asarray(ro), atol=tol,
+                               rtol=tol)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(rm), atol=tol,
+                               rtol=tol)
+    np.testing.assert_allclose(np.asarray(l), np.asarray(rl), atol=tol,
+                               rtol=tol)
+
+
+def test_decode_attention_normalized_equals_full_softmax():
+    """Single-shard normalized output == dense softmax attention."""
+    B, H, Hkv, S, hd = 2, 4, 2, 256, 32
+    q = _rand((B, H, hd), jnp.float32)
+    k = _rand((B, Hkv, S, hd), jnp.float32)
+    v = _rand((B, Hkv, S, hd), jnp.float32)
+    valid = jnp.ones((B, S), bool)
+    out = decode_attention(q, k, v, valid)
+    ref = flash_attention_ref(q[:, :, None], k, v, causal=False)[:, :, 0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_partials_merge_across_shards():
+    """Splitting the cache into two shards and logsumexp-merging the
+    partials must equal the unsharded result (the flash-decoding
+    invariant the mesh combine relies on)."""
+    B, H, Hkv, S, hd = 1, 4, 2, 512, 32
+    q = _rand((B, H, hd), jnp.float32)
+    k = _rand((B, Hkv, S, hd), jnp.float32)
+    v = _rand((B, Hkv, S, hd), jnp.float32)
+    valid = jnp.asarray(RNG.random((B, S)) < 0.8)
+    o, m, l = decode_attention_partial(q, k, v, valid)
+    full = np.asarray(o / jnp.maximum(l, 1e-30)[..., None])
+
+    h = S // 2
+    parts = [decode_attention_partial(q, k[:, :, :h], v[:, :, :h],
+                                      valid[:, :h]),
+             decode_attention_partial(q, k[:, :, h:], v[:, :, h:],
+                                      valid[:, h:])]
+    (o1, m1, l1), (o2, m2, l2) = parts
+    mm = jnp.maximum(m1, m2)
+    ll = l1 * jnp.exp(m1 - mm) + l2 * jnp.exp(m2 - mm)
+    oo = o1 * jnp.exp(m1 - mm)[..., None] + o2 * jnp.exp(m2 - mm)[..., None]
+    merged = np.asarray(oo / jnp.maximum(ll, 1e-30)[..., None])
+    np.testing.assert_allclose(full, merged, atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    (2, 256, 4, 16, 32, 64),
+    (1, 128, 8, 32, 16, 128),
+    (2, 64, 2, 8, 64, 32),
+]
+
+
+def _ssd_inputs(B, L, H, P, N, dtype=jnp.float32):
+    xh = _rand((B, L, H, P), dtype, 0.5)
+    dt = jnp.asarray(RNG.uniform(1e-3, 0.1, (B, L, H)), jnp.float32)
+    a = jnp.asarray(-RNG.uniform(0.5, 4.0, (H,)), jnp.float32)
+    B_ = _rand((B, L, N), dtype, 0.3)
+    C_ = _rand((B, L, N), dtype, 0.3)
+    D = jnp.ones((H,), jnp.float32)
+    h0 = jnp.asarray(RNG.standard_normal((B, H, P, N)) * 0.1, jnp.float32)
+    return xh, dt, a, B_, C_, D, h0
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_scan_matches_sequential_ref(case):
+    B, L, H, P, N, c = case
+    xh, dt, a, B_, C_, D, h0 = _ssd_inputs(B, L, H, P, N)
+    y, hT = ssd_scan(xh, dt, a, B_, C_, D, h0, chunk=c)
+    ry, rhT = ssd_scan_ref(xh, dt, a, B_, C_, D, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ry), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(rhT), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_ssd_scan_matches_production_jnp_path():
+    """The kernel and the model's chunked-jnp SSD must agree (they are
+    alternative lowerings of the same algorithm)."""
+    B, L, H, P, N = 2, 128, 4, 16, 32
+    xh, dt, a, B_, C_, D, h0 = _ssd_inputs(B, L, H, P, N)
+    y1, h1 = ssd_scan(xh, dt, a, B_, C_, D, h0, chunk=64)
+    y2, h2 = ssm_lib.ssd_chunked(xh, dt, a, B_, C_, D, 64, h0=h0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_ssd_scan_chunk_invariance():
+    B, L, H, P, N = 1, 192, 2, 8, 16
+    xh, dt, a, B_, C_, D, h0 = _ssd_inputs(B, L, H, P, N)
+    outs = [ssd_scan(xh, dt, a, B_, C_, D, h0, chunk=c)[0]
+            for c in (32, 64, 96)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_scan_state_handoff_equals_decode_steps():
+    """Prefill final state + recurrent decode steps == one longer scan
+    (the prefill->decode cache handoff invariant)."""
+    B, L, H, P, N = 1, 64, 2, 8, 16
+    xh, dt, a, B_, C_, D, h0 = _ssd_inputs(B, L + 4, H, P, N)
+    y_full, h_full = ssd_scan_ref(xh, dt, a, B_, C_, D, h0)
+    y_pre, h_pre = ssd_scan(xh[:, :L], dt[:, :L], a, B_[:, :L], C_[:, :L],
+                            D, h0, chunk=32)
+    h = h_pre
+    for t in range(L, L + 4):
+        y_t, h = ssm_lib.ssd_decode_step(
+            xh[:, t], dt[:, t], a, B_[:, t], C_[:, t], D, h)
+        np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_full[:, t]),
+                                   atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_full), atol=1e-4,
+                               rtol=1e-4)

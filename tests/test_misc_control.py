@@ -1,0 +1,169 @@
+"""Vertical scaler, SLO monitor, lifecycle machine, workload generator,
+cost ledger — the smaller control-plane pieces."""
+import numpy as np
+import pytest
+
+from repro.core.cost import FLAVORS, LeaseLedger, get_flavor
+from repro.core.lifecycle import (Replica, ReplicaSet, SetupTimes, State,
+                                  setup_times_for)
+from repro.core.slo import LatencyMonitor, SLOSpec
+from repro.core.vertical import VerticalConfig, VerticalScaler
+from repro.configs import get_config
+from repro.workload.generator import get_trace, taxi_like, toll_like
+
+SETUP = SetupTimes(45.0, 20.0, 10.0)
+
+
+def _warm_replica(chips=8):
+    r = Replica(flavor=get_flavor(f"v5e-{chips}"), service="s")
+    r.state = State.CONTAINER_WARM
+    r.ready_at = 0.0
+    r.chips_active = chips
+    return r
+
+
+# ------------------------------------------------------------- vertical
+def test_vertical_doubles_on_slo_miss():
+    v = VerticalScaler(SLOSpec(2.0))
+    r = _warm_replica(8)
+    r.chips_active = 2
+    assert v.adjust(r, observed_p95=2.5, now=5.0) == 4
+    assert v.adjust(r, observed_p95=2.5, now=10.0) == 8
+    assert v.adjust(r, observed_p95=2.5, now=15.0) == 8   # slice cap
+
+
+def test_vertical_shrinks_one_at_a_time_and_colocates():
+    v = VerticalScaler(SLOSpec(2.0))
+    r = _warm_replica(8)
+    assert v.adjust(r, observed_p95=0.5, now=5.0) == 7
+    assert r.colocated_batch                       # batch jobs moved in
+    assert v.adjust(r, observed_p95=0.5, now=10.0) == 6
+
+
+def test_vertical_no_change_inside_band():
+    v = VerticalScaler(SLOSpec(2.0), VerticalConfig(margin=0.7))
+    r = _warm_replica(8)
+    assert v.adjust(r, observed_p95=1.8, now=5.0) == 8
+    assert v.adjust(r, observed_p95=None, now=10.0) == 8  # no traffic
+    assert not v.events
+
+
+def test_vertical_power_of_two_mode():
+    v = VerticalScaler(SLOSpec(2.0), VerticalConfig(power_of_two=True))
+    r = _warm_replica(8)
+    assert v.adjust(r, observed_p95=0.5, now=5.0) == 4
+
+
+def test_chip_seconds_saved_integration():
+    v = VerticalScaler(SLOSpec(2.0))
+    r = _warm_replica(4)
+    v.adjust(r, 0.5, now=0.0)     # 4 -> 3
+    v.adjust(r, 0.5, now=10.0)    # 3 -> 2
+    saved = v.chip_seconds_saved(20.0, {r.id: r})
+    assert saved == pytest.approx(1 * 10 + 2 * 10)
+
+
+# ------------------------------------------------------------------ slo
+def test_latency_monitor_windows_and_compliance():
+    m = LatencyMonitor(SLOSpec(1.0), window=5.0)
+    for t, l in [(1.0, 0.5), (2.0, 0.6), (4.0, 0.7)]:
+        m.record(t, l)
+    p95, ok = m.roll(5.0)
+    assert ok and p95 < 1.0
+    m.record(7.0, 3.0)
+    p95, ok = m.roll(10.0)
+    assert not ok
+    assert m.roll(15.0) is None           # empty window -> no verdict
+    assert m.compliance() == 0.5
+
+
+# ------------------------------------------------------------ lifecycle
+def test_state_machine_legal_path_and_times():
+    r = Replica(flavor=FLAVORS[0], service="s")
+    t1 = r.transition(State.VM_WARM, 0.0, SETUP)
+    assert t1 == 45.0
+    t2 = r.transition(State.CONTAINER_COLD, t1, SETUP)
+    assert t2 == 65.0
+    t3 = r.transition(State.CONTAINER_WARM, t2, SETUP)
+    assert t3 == 75.0
+    assert r.is_serving(76.0) and not r.is_serving(74.0)
+    # unload is instantaneous (paper footnote 2)
+    t4 = r.transition(State.CONTAINER_COLD, 100.0, SETUP)
+    assert t4 == 100.0
+
+
+def test_state_machine_rejects_illegal_transition():
+    r = Replica(flavor=FLAVORS[0], service="s")
+    with pytest.raises(ValueError):
+        r.transition(State.CONTAINER_WARM, 0.0, SETUP)
+
+
+def test_setup_times_scale_with_model_size():
+    small = setup_times_for(get_config("smollm-135m"))
+    big = setup_times_for(get_config("internvl2-26b"))
+    assert big.t_ml > 50 * small.t_ml      # weights load dominates
+    assert big.t_cd > small.t_cd           # compile scales with params
+    assert small.t_vm == big.t_vm          # slice bring-up is flat
+
+
+def test_replica_set_queries():
+    rs = ReplicaSet()
+    a = rs.add(_warm_replica(1))
+    b = rs.add(Replica(flavor=FLAVORS[0], service="s"))
+    b.lease_expiry = 10.0
+    a.lease_expiry = 100.0
+    assert len(rs.serving(1.0)) == 1
+    assert rs.expiring_by(50.0) == [b]
+    rs.remove(a.id)
+    assert len(rs) == 1
+
+
+# ----------------------------------------------------------------- cost
+def test_flavor_catalog_nonlinear_pricing():
+    costs = {f.chips: f.cost_per_hour for f in FLAVORS}
+    # super-linear: cost per chip grows with slice size
+    assert costs[16] / 16 > costs[1] / 1
+    assert all(f.hbm_gib == f.chips * 16.0 for f in FLAVORS)
+
+
+def test_lease_ledger_minimum_charge():
+    led = LeaseLedger(tau_vm=3600.0)
+    f = get_flavor("v5e-2")
+    exp = led.open(1, f, now=100.0)
+    assert exp == 3700.0
+    assert led.total_usd == pytest.approx(f.cost_per_hour)
+    led.close(1)
+    assert led.expiry(1) is None
+    assert led.total_usd == pytest.approx(f.cost_per_hour)  # paid anyway
+
+
+# ------------------------------------------------------------- workload
+def test_traces_are_deterministic_and_positive():
+    a, b = taxi_like(n=2000), taxi_like(n=2000)
+    np.testing.assert_array_equal(a.y, b.y)
+    assert np.all(a.y >= 0)
+    assert len(a.holidays) >= 1
+
+
+def test_traces_have_diurnal_structure():
+    tr = toll_like(n=1440 * 5)
+    day = tr.y.reshape(5, 1440)
+    daily_profile = day.mean(0)
+    # commuter double peak: morning and evening well above the night floor
+    night = daily_profile[:240].mean()
+    morning = daily_profile[420:540].max()
+    evening = daily_profile[960:1140].max()
+    assert morning > 1.5 * night and evening > 1.5 * night
+
+
+def test_trace_split_matches_paper():
+    tr = taxi_like(n=10_000)
+    (t1, y1), (t2, y2), (t3, y3) = tr.split()
+    assert len(y1) == 6000 and len(y2) == 500 and len(y3) >= 2500
+
+
+def test_get_trace_registry():
+    assert get_trace("taxi", n=100).name == "taxi_like"
+    assert get_trace("toll", n=100).name == "toll_like"
+    with pytest.raises(KeyError):
+        get_trace("nope")

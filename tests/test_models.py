@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one train step with
+finite loss + correct shapes, prefill/decode consistency, param counting."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import data as data_lib
+from repro.configs import ARCH_IDS, get_config, get_reduced_config
+from repro.models import (decode_step, forward, init_cache, init_params,
+                          moe_blocks_for, prefill)
+
+MESH = jax.make_mesh((1, 1), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch(request):
+    return request.param
+
+
+def test_all_ten_archs_assigned():
+    assert len(ARCH_IDS) == 10
+    fams = {get_config(a).family for a in ARCH_IDS}
+    assert fams == {"dense", "ssm", "moe", "vlm", "hybrid", "encoder"}
+
+
+def test_forward_step_finite_and_shaped(arch):
+    cfg = get_reduced_config(arch)
+    with jax.set_mesh(MESH):
+        params = init_params(cfg, jax.random.key(0), moe_blocks_for(cfg, 1))
+        batch = data_lib.synthetic_batch(cfg, 2, 64)
+        loss, metrics = jax.jit(
+            lambda p, b: forward(cfg, p, b, MESH))(params, batch)
+        assert jnp.isfinite(loss), f"{arch}: loss={loss}"
+        assert loss.shape == ()
+        assert float(loss) > 0
+
+
+def test_prefill_then_decode_matches_full_prefill(arch):
+    """decode(prefill(S)) logits == prefill(S+1) last logits — the KV-cache
+    handoff invariant, fp32 for exactness."""
+    cfg = dataclasses.replace(get_reduced_config(arch), dtype="float32")
+    if not cfg.supports_decode:
+        pytest.skip("encoder-only")
+    with jax.set_mesh(MESH):
+        params = init_params(cfg, jax.random.key(1), moe_blocks_for(cfg, 1),
+                             dtype="float32")
+        B, S = 2, 96
+        batch = data_lib.synthetic_batch(cfg, B, S + 1)
+
+        def sub(n):
+            out = {}
+            for k, v in batch.items():
+                if k == "patches":
+                    out[k] = v
+                elif k != "targets":
+                    out[k] = v[:, :n]
+            return out
+
+        logits_full, _ = jax.jit(
+            lambda p, b: prefill(cfg, p, b, MESH, max_len=S + 1))(
+                params, sub(S + 1))
+        logits_pre, cache = jax.jit(
+            lambda p, b: prefill(cfg, p, b, MESH, max_len=S + 1))(
+                params, sub(S))
+        tok = batch["tokens"][:, S:S + 1]
+        logits_dec, _ = jax.jit(
+            lambda p, t, c: decode_step(cfg, p, t, c, MESH))(
+                params, tok, cache)
+        a = np.asarray(logits_full[:, -1], np.float32)
+        b = np.asarray(logits_dec[:, 0], np.float32)
+        rel = np.max(np.abs(a - b)) / (np.max(np.abs(a)) + 1e-9)
+        assert rel < 5e-4, f"{arch}: rel_err={rel}"
+
+
+def test_param_count_matches_instantiated(arch):
+    cfg = get_reduced_config(arch)
+    with jax.set_mesh(MESH):
+        params = init_params(cfg, jax.random.key(0), moe_blocks_for(cfg, 1))
+    n_real = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    n_analytic = cfg.param_count()
+    # analytic count uses the unpadded vocab; instantiated tables are padded
+    pad = (cfg.padded_vocab - cfg.vocab) * cfg.d_model
+    n_tables = 1 + (0 if cfg.embed_inputs else 1)   # head (+ token embed)
+    n_pad = n_tables * pad
+    assert abs(n_real - n_analytic - n_pad) / max(n_real, 1) < 0.02, \
+        (arch, n_real, n_analytic)
+
+
+def test_full_configs_match_assignment_table():
+    spec = {
+        "qwen3-4b": (36, 2560, 32, 8, 9728, 151936),
+        "llama3-8b": (32, 4096, 32, 8, 14336, 128256),
+        "smollm-135m": (30, 576, 9, 3, 1536, 49152),
+        "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+        "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+        "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+    }
+    for arch, (L, d, H, Hkv, ff, V) in spec.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab) == (L, d, H, Hkv, ff, V), arch
+
+
+def test_moe_configs():
+    ds = get_config("deepseek-moe-16b").moe
+    assert (ds.n_routed, ds.top_k, ds.n_shared) == (64, 6, 2)
+    mx = get_config("mixtral-8x22b").moe
+    assert (mx.n_routed, mx.top_k) == (8, 2)
+    assert get_config("mixtral-8x22b").sliding_window == 4096
+
+
+def test_ssm_state_sizes():
+    assert get_config("mamba2-370m").ssm.d_state == 128
+    assert get_config("zamba2-2.7b").ssm.d_state == 64

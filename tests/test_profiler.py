@@ -1,0 +1,76 @@
+"""Execution-time distribution estimation: MLE fitters recover known
+parameters, the K-S ranking identifies the generating family, and the p95
+of the best fit tracks the empirical p95 (what Algorithm 1 consumes)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.profiler import (FittedDist, LatencyProfile, ServiceProfiler,
+                                 fit_best_distribution, ks_statistic)
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("family,sampler", [
+    ("normal", lambda n: RNG.normal(5.0, 0.5, n)),
+    ("lognormal", lambda n: RNG.lognormal(0.5, 0.4, n)),
+    ("gamma", lambda n: RNG.gamma(4.0, 0.5, n)),
+    ("weibull", lambda n: 2.0 * RNG.weibull(1.8, n)),
+    ("gumbel", lambda n: RNG.gumbel(3.0, 0.4, n)),
+])
+def test_ks_ranking_identifies_generating_family(family, sampler):
+    x = np.abs(sampler(8000)) + 1e-6
+    best, fits = fit_best_distribution(x)
+    # the true family must rank in the top 2 (families overlap heavily)
+    names = [f.name for f in fits[:2]]
+    assert family in names, (family, [(f.name, f.ks_stat) for f in fits])
+
+
+def test_p95_of_best_fit_tracks_empirical():
+    x = RNG.lognormal(0.0, 0.3, 10_000) + 0.5
+    prof = LatencyProfile.from_samples(x)
+    emp = float(np.percentile(x, 95))
+    assert abs(prof.p95 - emp) / emp < 0.05
+
+
+def test_ks_statistic_decreases_with_sample_size():
+    """Glivenko-Cantelli direction: more samples from the true dist ->
+    smaller D_n."""
+    d = FittedDist("normal", {"mu": 0.0, "sigma": 1.0})
+    small = ks_statistic(d, RNG.normal(0, 1, 100))
+    large = ks_statistic(d, RNG.normal(0, 1, 20_000))
+    assert large < small
+
+
+@settings(max_examples=30, deadline=None)
+@given(mu=st.floats(0.1, 5.0), sigma=st.floats(0.05, 1.0),
+       n=st.integers(200, 2000))
+def test_ks_statistic_bounds(mu, sigma, n):
+    x = np.abs(np.random.default_rng(0).normal(mu, sigma, n)) + 1e-9
+    best, fits = fit_best_distribution(x)
+    for f in fits:
+        assert 0.0 <= f.ks_stat <= 1.0
+
+
+def test_cdf_monotone_and_bounded():
+    x = RNG.gamma(3.0, 1.0, 5000)
+    best, _ = fit_best_distribution(x)
+    grid = np.linspace(0, x.max() * 2, 500)
+    c = best.cdf(grid)
+    assert np.all(np.diff(c) >= -1e-12)
+    assert np.all((c >= -1e-12) & (c <= 1 + 1e-12))
+
+
+def test_ppf_inverts_cdf():
+    x = RNG.lognormal(0.2, 0.4, 5000)
+    best, _ = fit_best_distribution(x)
+    for q in (0.5, 0.9, 0.95, 0.99):
+        v = best.ppf(q)
+        assert abs(float(best.cdf(np.array([v]))[0]) - q) < 1e-6
+
+
+def test_service_profiler_caches_per_flavor():
+    p = ServiceProfiler()
+    p.profile("svc", "v5e-1", RNG.lognormal(0.0, 0.2, 2000) + 1.0)
+    p.profile("svc", "v5e-4", RNG.lognormal(-1.0, 0.2, 2000) + 0.3)
+    assert p.p95("svc", "v5e-1") > p.p95("svc", "v5e-4")

@@ -1,0 +1,179 @@
+"""Algorithm 2 behaviour against a mock infrastructure: registries fire in
+lifecycle order, proactive deployment leads demand, lease expiry is
+compensated, scale-down parks replicas in the Container-Cold pool and
+surges re-instantiate them."""
+import dataclasses
+from typing import Dict, List
+
+import pytest
+
+from repro.core.cost import SliceFlavor, get_flavor
+from repro.core.estimator import FlavorProfile
+from repro.core.lifecycle import Replica, SetupTimes, State
+from repro.core.provisioner import (ProvisionerConfig, Registry,
+                                    ResourceProvisioner)
+
+SETUP = SetupTimes(t_vm=45.0, t_cd=20.0, t_ml=10.0, t_forecast=1.0)
+FLAVOR = SliceFlavor("test-1", 1, 16.0, 1.0)
+
+
+class MockInfra:
+    def __init__(self):
+        self.replicas: Dict[int, Replica] = {}
+        self.log: List[tuple] = []
+
+    def deploy_vm(self, flavor_name, now):
+        r = Replica(flavor=FLAVOR, service="svc")
+        r.transition(State.VM_WARM, now, SETUP)
+        self.replicas[r.id] = r
+        self.log.append(("deploy", now, r.id))
+        return r
+
+    def download_container(self, rid, now):
+        r = self.replicas[rid]
+        assert r.state == State.VM_WARM, f"download in state {r.state}"
+        assert now >= r.ready_at, "container download before VM warm"
+        r.transition(State.CONTAINER_COLD, now, SETUP)
+        self.log.append(("download", now, rid))
+
+    def load_model(self, rid, now):
+        r = self.replicas[rid]
+        assert r.state == State.CONTAINER_COLD
+        assert now >= r.ready_at, "model load before container ready"
+        r.transition(State.CONTAINER_WARM, now, SETUP)
+        self.log.append(("load", now, rid))
+
+    def unload_model(self, rid, now):
+        r = self.replicas[rid]
+        if r.state == State.CONTAINER_WARM:
+            r.transition(State.CONTAINER_COLD, now, SETUP)
+        self.log.append(("unload", now, rid))
+
+    def terminate_vm(self, rid, now):
+        self.replicas.pop(rid, None)
+        self.log.append(("terminate", now, rid))
+
+    def serving_replicas(self, now):
+        return [r for r in self.replicas.values() if r.is_serving(now)]
+
+    def lb_update(self, now):
+        pass
+
+
+def _prov(infra, forecast, **kw):
+    profiles = [FlavorProfile(FLAVOR, 0.2, True)]   # n_req = 10 at lambda=2
+    cfg = ProvisionerConfig(tick_s=60.0, tau_vm=3600.0, **kw)
+    return ResourceProvisioner(infra, SETUP, 2.0, profiles, forecast, cfg)
+
+
+def run_ticks(prov, n, start=0.0, tick=60.0):
+    recs = []
+    for i in range(n):
+        recs.append(prov.tick(start + i * tick))
+    return recs
+
+
+def test_proactive_deploy_and_staged_bringup():
+    infra = MockInfra()
+    prov = _prov(infra, lambda now, h: 35.0)        # alpha = ceil(35/10) = 4
+    recs = run_ticks(prov, 3)
+    assert recs[0]["deployed"] == 4
+    # registries fire on 60s ticks: download at t=60, load at t=120,
+    # warm at t=120+t_ml=130 — all 4 serving by 131
+    assert len(infra.serving_replicas(131.0)) == 4
+    # lifecycle order per replica: deploy < download < load
+    events = {}
+    for kind, t, rid in infra.log:
+        events.setdefault(rid, {})[kind] = t
+    for rid, ev in events.items():
+        assert ev["deploy"] < ev["download"] < ev["load"]
+
+
+def test_alpha_tracks_forecast_up():
+    infra = MockInfra()
+    demand = iter([10.0, 10.0, 80.0, 80.0])
+    prov = _prov(infra, lambda now, h: next(demand))
+    recs = run_ticks(prov, 4)
+    assert recs[0]["alpha"] == 1
+    assert recs[2]["alpha"] == 8
+    assert recs[2]["deployed"] == 7       # 8 - 1 already planned
+
+
+def test_scale_down_parks_in_cold_pool_and_surge_reuses_it():
+    infra = MockInfra()
+    seq = [50.0, 50.0, 50.0, 10.0, 10.0, 50.0]
+    it = iter(seq)
+    prov = _prov(infra, lambda now, h: next(it))
+    recs = run_ticks(prov, len(seq))
+    # tick 3: demand drops 50->10: alpha 5 -> 1, 4 replicas scaled down
+    assert recs[3]["slept"] == 4
+    assert recs[3]["cold_pool"] == 4
+    # tick 5: surge back to 50: cold pool re-instantiated BEFORE new deploys
+    assert recs[5]["woken"] == 4
+    # reuse means total deployed stays at the peak fleet size
+    deploys = [e for e in infra.log if e[0] == "deploy"]
+    assert len(deploys) == 5
+
+
+def test_cold_pool_wakeup_is_fast_path():
+    """Re-instantiating a Container-Cold replica only costs t_ml, not the
+    full t_setup — the core speedup of tracking lifecycle states."""
+    infra = MockInfra()
+    # replicas warm at t=130; dip at t=180 parks 2, surge at t=240 wakes 2
+    seq = [30.0, 30.0, 30.0, 10.0, 30.0]
+    it = iter(seq)
+    prov = _prov(infra, lambda now, h: next(it))
+    run_ticks(prov, len(seq))
+    loads = [e for e in infra.log if e[0] == "load"]
+    wake = [e for e in loads if e[1] >= 240.0]
+    assert wake, "cold-pool replica was not re-instantiated"
+    # the wake-up is a pure model reload: no deploy after initial bring-up
+    assert all(e[1] < 60.0 for e in infra.log if e[0] == "deploy")
+
+
+def test_lease_expiry_is_compensated():
+    infra = MockInfra()
+    prov = _prov(infra, lambda now, h: 25.0)        # alpha = 3
+    cfg = prov.cfg
+    # run past the lease horizon: expiring replicas must be replaced ahead
+    # of termination, keeping the serving count at alpha
+    recs = run_ticks(prov, 65, tick=60.0)           # 3900s > tau_vm = 3600
+    n_deploys = sum(r["deployed"] for r in recs)
+    assert n_deploys >= 6                           # 3 initial + 3 renewals
+    assert len(infra.serving_replicas(64 * 60.0)) >= 3
+
+
+def test_strict_paper_delta_underprovisions_on_expiry():
+    """The printed formula (line 12) scales down when leases expire — kept
+    behind a flag to document the erratum."""
+    infra_a, infra_b = MockInfra(), MockInfra()
+    prov_a = _prov(infra_a, lambda now, h: 25.0)
+    prov_b = _prov(infra_b, lambda now, h: 25.0, strict_paper_delta=True)
+    run_ticks(prov_a, 66)
+    run_ticks(prov_b, 66)
+    # past lease expiry + one full bring-up: corrected form keeps serving,
+    # printed form has terminated its fleet without replacements
+    t = 65 * 60.0
+    assert len(infra_a.serving_replicas(t)) > len(
+        infra_b.serving_replicas(t))
+
+
+def test_min_replicas_floor():
+    infra = MockInfra()
+    prov = _prov(infra, lambda now, h: 0.0)
+    recs = run_ticks(prov, 3)
+    assert all(r["alpha"] >= 1 for r in recs)
+    assert len(infra.replicas) >= 1
+
+
+def test_registry_pop_semantics():
+    reg = Registry()
+    reg.add(10.0, 1)
+    reg.add(20.0, 2)
+    reg.add(15.0, 3)
+    assert reg.count_by(16.0) == 2
+    assert sorted(reg.pop_due(16.0)) == [1, 3]
+    assert reg.pop_due(16.0) == []
+    assert reg.count_by(100.0) == 1
+    reg.discard(2)
+    assert reg.count_by(100.0) == 0

@@ -1,0 +1,100 @@
+"""Logical-axis sharding properties (hypothesis): divisibility fallback
+never produces an invalid PartitionSpec, axes are never reused across dims,
+and the fallback is monotone (a divisible dim always shards)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.sharding import (DEFAULT_RULES, SERVE_DECODE_RULES,
+                                   divisible_axes, logical_to_pspec)
+
+
+def _mesh(shape=(2, 4), axes=("data", "model")):
+    devs = np.array(jax.devices()[:1] * int(np.prod(shape)),
+                    dtype=object).reshape(shape)
+    return jax.sharding.Mesh(devs, axes)
+
+
+MESH = _mesh()
+MESH3 = _mesh((2, 2, 2), ("pod", "data", "model"))
+
+_LOGICAL = st.sampled_from([None, "batch", "embed", "heads", "kv_heads",
+                            "mlp", "vocab", "expert", "kv_seq", "act_seq"])
+
+
+@settings(max_examples=200, deadline=None)
+@given(dims=st.lists(st.integers(1, 64), min_size=1, max_size=4),
+       names=st.lists(_LOGICAL, min_size=4, max_size=4))
+def test_pspec_axes_unique_and_divisible(dims, names):
+    axes = tuple(names[:len(dims)])
+    spec = logical_to_pspec(tuple(dims), axes, MESH3, SERVE_DECODE_RULES)
+    sizes = dict(zip(MESH3.axis_names, MESH3.devices.shape))
+    used = []
+    for dim, entry in zip(dims, tuple(spec)):
+        if entry is None:
+            continue
+        entry_axes = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for a in entry_axes:
+            assert a in sizes
+            assert a not in used, "mesh axis used twice"
+            used.append(a)
+            prod *= sizes[a]
+        assert dim % prod == 0, "non-divisible sharding emitted"
+
+
+def test_divisible_dim_is_sharded_not_replicated():
+    spec = logical_to_pspec((64, 128), ("batch", "mlp"), MESH, DEFAULT_RULES)
+    assert spec[0] is not None and spec[1] == "model"
+
+
+def test_indivisible_dim_falls_back_to_replication():
+    # smollm: 9 heads on a 4-way model axis
+    spec = logical_to_pspec((576, 9, 64), ("embed", "heads", "head_dim"),
+                            MESH, DEFAULT_RULES)
+    assert spec[1] is None
+
+
+def test_partial_prefix_fallback():
+    # batch=2 over ('pod','data') with pod=2,data=2: only 'pod' fits
+    spec = logical_to_pspec((2, 8), ("batch", "mlp"), MESH3,
+                            DEFAULT_RULES)
+    assert spec[0] in ("pod", ("pod",))
+
+
+def test_kv_seq_takes_idle_axes_when_batch_is_one():
+    # decode long-context: batch=1 leaves pod+data idle; kv_seq takes all
+    spec = logical_to_pspec(
+        (32, 1, 8, 1024, 128),
+        ("layers", "batch", None, "kv_seq", "head_dim"),
+        MESH3, SERVE_DECODE_RULES)
+    assert spec[1] is None
+    assert set(spec[3]) == {"pod", "data", "model"}
+
+
+def test_kv_seq_yields_to_batch():
+    spec = logical_to_pspec(
+        (32, 8, 8, 1024, 128),
+        ("layers", "batch", None, "kv_seq", "head_dim"),
+        MESH3, SERVE_DECODE_RULES)
+    batch_axes = spec[1] if isinstance(spec[1], tuple) else (spec[1],)
+    seq_axes = spec[3] if isinstance(spec[3], tuple) else (spec[3],)
+    assert not (set(batch_axes) & set(seq_axes))
+
+
+@settings(max_examples=100, deadline=None)
+@given(dim=st.integers(1, 512))
+def test_divisible_axes_prefix_property(dim):
+    out = divisible_axes(MESH3, ("pod", "data", "model"), dim)
+    sizes = dict(zip(MESH3.axis_names, MESH3.devices.shape))
+    prod = 1
+    for a in out:
+        prod *= sizes[a]
+    assert dim % prod == 0
+    # maximality: adding the next axis would break divisibility
+    rest = [a for a in ("pod", "data", "model") if a not in out]
+    if rest:
+        assert dim % (prod * sizes[rest[0]]) != 0

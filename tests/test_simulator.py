@@ -1,0 +1,102 @@
+"""Fleet-simulator integration: the full BARISTA loop meets its SLO on a
+well-forecasted trace, cost accounting follows the lease model, vertical
+scaling reclaims chips, and hedging reduces tail latency."""
+import numpy as np
+import pytest
+
+from repro.core import ServiceSpec, SLOSpec
+from repro.core.latency_model import LatencySampler
+from repro.serving.cluster import FleetSimulator, SimConfig
+from repro.workload.generator import taxi_like
+
+
+def _svc(bound=2.0, seq=1024, arch="smollm-135m"):
+    return ServiceSpec(name="svc", arch=arch, slo=SLOSpec(bound),
+                       min_mem_gib=1.0, request_seq=seq)
+
+
+def _oracle_forecast(tr, bound):
+    def forecast(now_s, horizon_s):
+        i = int(np.clip((now_s + horizon_s) / 60.0 - tr.t[0], 0,
+                        len(tr.y) - 1))
+        return float(tr.y[i]) * bound / 60.0
+    return forecast
+
+
+def test_slo_compliance_with_oracle_forecast():
+    tr = taxi_like(n=40, base=120.0)
+    svc = _svc(2.0)
+    sim = FleetSimulator(svc, sim=SimConfig(seed=0))
+    res = sim.run(tr.t[:30], tr.y[:30], _oracle_forecast(tr, 2.0))
+    assert res.request_compliance >= 0.97
+    assert res.window_compliance >= 0.95
+    assert res.dropped == 0
+
+
+def test_cost_follows_lease_ledger():
+    from repro.core.cost import get_flavor
+    tr = taxi_like(n=20, base=60.0)
+    svc = _svc(2.0)
+    sim = FleetSimulator(svc, sim=SimConfig(seed=0, tau_vm=3600.0))
+    res = sim.run(tr.t[:15], tr.y[:15], _oracle_forecast(tr, 2.0))
+    # minimum-lease accounting: each deployment pays one full tau_vm hour
+    n_leases = sum(h["deployed"] for h in res.provision_history) \
+        + sim.sim.warm_pool
+    per_lease = get_flavor(res.provision_history[0]["flavor"]).cost_per_hour
+    assert res.total_cost_usd == pytest.approx(n_leases * per_lease)
+
+
+def test_underforecast_violates_slo_more_than_oracle():
+    """Forecast quality -> SLO compliance (the paper's core causal chain)."""
+    tr = taxi_like(n=40, base=300.0)
+    svc = _svc(0.15, seq=2048)            # tight SLO so queueing bites
+    good = FleetSimulator(svc, sim=SimConfig(seed=0, vertical=False))
+    bad = FleetSimulator(svc, sim=SimConfig(seed=0, vertical=False))
+    r_good = good.run(tr.t[:30], tr.y[:30], _oracle_forecast(tr, 0.15))
+    r_bad = bad.run(tr.t[:30], tr.y[:30],
+                    lambda now, h: 0.2 * _oracle_forecast(tr, 0.15)(now, h))
+    assert r_bad.request_compliance <= r_good.request_compliance
+
+
+def test_vertical_scaler_saves_chips_under_overprovision():
+    tr = taxi_like(n=30, base=40.0)
+    svc = _svc(2.0)
+    sim = FleetSimulator(svc, sim=SimConfig(seed=0, vertical=True))
+    # over-forecast 3x: vertical scaling should shave chips back
+    res = sim.run(tr.t[:20], tr.y[:20],
+                  lambda now, h: 3.0 * _oracle_forecast(tr, 2.0)(now, h))
+    assert res.request_compliance >= 0.95
+
+
+def test_replica_timeline_is_recorded():
+    tr = taxi_like(n=15, base=60.0)
+    svc = _svc(2.0)
+    sim = FleetSimulator(svc, sim=SimConfig(seed=0))
+    res = sim.run(tr.t[:10], tr.y[:10], _oracle_forecast(tr, 2.0))
+    assert len(res.replica_timeline) >= 9
+    ts = [t for t, _, _ in res.replica_timeline]
+    assert ts == sorted(ts)
+
+
+def test_hedging_cuts_straggler_tail():
+    """Timeout-hedging under an injected straggler tail must improve p99
+    at a small duplicate-work cost (beyond-paper straggler mitigation)."""
+    from repro.core.latency_model import LatencySampler
+    tr = taxi_like(n=40, base=150.0)
+    svc = _svc(2.0, seq=1024, arch="llama3-8b")
+
+    def forecast(now_s, horizon_s):
+        i = int(np.clip((now_s + horizon_s) / 60.0 - tr.t[0], 0,
+                        len(tr.y) - 1))
+        return 1.4 * float(tr.y[i]) * 2.0 / 60.0
+
+    p99 = {}
+    for factor in (0.0, 2.0):
+        sampler = LatencySampler(straggler_prob=0.04, straggler_mult=8.0,
+                                 seed=1)
+        sim = FleetSimulator(svc, sim=SimConfig(
+            seed=1, vertical=False, hedge_timeout_factor=factor),
+            sampler=sampler)
+        res = sim.run(tr.t[:30], tr.y[:30], forecast)
+        p99[factor] = float(np.percentile(res.latencies, 99))
+    assert p99[2.0] < p99[0.0]
